@@ -1,0 +1,53 @@
+"""Block-space attention: the paper's compact-vs-bounding-box comparison
+applied to causal attention (DESIGN.md SS3).
+
+Measures (a) compiled HLO FLOPs of the dense (bounding-box) vs
+triangular (compact) schedules -- the Theorem-2 work ratio in the LM
+setting -- and (b) CPU wall clock at a small config.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze
+from repro.models.attention import flash_attention_xla
+from .common import row, time_fn
+
+
+def hlo_flops(schedule, b, h, s, d, chunk):
+    def f(q, k, v):
+        return flash_attention_xla(q, k, v, kind="causal", chunk=chunk,
+                                   schedule=schedule)
+    spec = jax.ShapeDtypeStruct((b, h, s, d), jnp.float32)
+    compiled = jax.jit(f).lower(spec, spec, spec).compile()
+    return analyze(compiled.as_text()).flops
+
+
+def run():
+    print("# causal flash attention: dense (BB) vs triangular (compact)")
+    b, h, d = 1, 4, 64
+    for s, chunk in ((2048, 256), (4096, 512), (8192, 1024)):
+        fd = hlo_flops("dense", b, h, s, d, chunk)
+        ft = hlo_flops("triangular", b, h, s, d, chunk)
+        row(f"attn_flops_dense/s={s}", 0.0, f"hlo_flops={fd:.3e}")
+        row(f"attn_flops_tri/s={s}", 0.0,
+            f"hlo_flops={ft:.3e};work_ratio={fd / ft:.3f}")
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 4, 2048, 64)), jnp.float32)
+    fn_d = jax.jit(functools.partial(flash_attention_xla, kind="causal",
+                                     chunk=256, schedule="dense"))
+    fn_t = jax.jit(functools.partial(flash_attention_xla, kind="causal",
+                                     chunk=256, schedule="triangular"))
+    td = time_fn(fn_d, q, q, q, iters=10)
+    tt = time_fn(fn_t, q, q, q, iters=10)
+    row("attn_wall_dense/s=2048", td, "")
+    row("attn_wall_tri/s=2048", tt, f"speedup={td / tt:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""CA application benchmark: one nearest-neighbour step on the embedded
+gasket.
+
+Two XLA-measurable strategies (the Pallas kernels target TPU and are
+validated separately):
+
+  * embedded: roll-based stencil over the full n x n matrix (bounding
+    box work, n^2);
+  * packed:   the beyond-paper optimization from DESIGN.md -- state
+    stored in the compact orthotope layout (Lemma 2) with precomputed
+    lambda neighbour index tables; touches only the n^H live cells at
+    the cost of gathers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractal as F
+from repro.kernels import ref
+from .common import row, time_fn
+
+
+def packed_neighbor_tables(r: int):
+    """For each of the 3^r cells (in linear lambda order) the packed index
+    of its N/S/W/E neighbour, or 3^r (a zero ghost slot) if absent."""
+    n = 2 ** r
+    i = np.arange(3 ** r)
+    lx, ly = F.lambda_map_linear(i, r)
+    # embedded coord -> packed index lookup
+    emb_to_packed = np.full((n, n), 3 ** r, dtype=np.int64)
+    emb_to_packed[ly, lx] = i
+    tables = []
+    for dx, dy in ((0, -1), (0, 1), (-1, 0), (1, 0)):
+        x, y = lx + dx, ly + dy
+        ok = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+        t = np.where(ok, emb_to_packed[np.clip(y, 0, n - 1),
+                                       np.clip(x, 0, n - 1)], 3 ** r)
+        tables.append(t)
+    return jnp.asarray(np.stack(tables))  # (4, 3^r)
+
+
+@jax.jit
+def packed_parity_step(state, tables):
+    s = jnp.concatenate([state, jnp.zeros((1,), state.dtype)])
+    nsum = s[tables[0]] + s[tables[1]] + s[tables[2]] + s[tables[3]]
+    return jnp.mod(state + nsum, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def embedded_parity_step(state, n):
+    return ref.ca_step_ref(state, "parity")
+
+
+def run():
+    print("# CA step: embedded n^2 stencil vs packed n^H gather")
+    for r in range(6, 12):
+        n = 2 ** r
+        mask = F.membership_grid(n)
+        rng = np.random.default_rng(0)
+        s_emb = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                            .astype(np.float32))
+        t_emb = time_fn(embedded_parity_step, s_emb, n, iters=10)
+
+        tables = packed_neighbor_tables(r)
+        i = np.arange(3 ** r)
+        lx, ly = F.lambda_map_linear(i, r)
+        lx, ly = np.asarray(lx), np.asarray(ly)
+        s_pack = jnp.asarray(np.asarray(s_emb)[ly, lx])  # linear lambda order
+        t_pack = time_fn(packed_parity_step, s_pack, tables, iters=10)
+
+        # correctness cross-check
+        want = ref.ca_step_ref(s_emb, "parity")
+        got_packed = packed_parity_step(s_pack, tables)
+        want_packed = np.asarray(want)[ly, lx]
+        assert np.array_equal(np.asarray(got_packed), want_packed), r
+
+        row(f"ca_embedded/n={n}", t_emb, f"cells={n * n}")
+        row(f"ca_packed/n={n}", t_pack,
+            f"cells={3 ** r};speedup={t_emb / t_pack:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Mapping-cost scaling: time the lambda(w) map itself (all blocks of a
+level-r gasket) and the triangular/band decodes, jitted on CPU.
+
+The paper's Theorem 1 cost is O(log log n) per block WITH a |B|-thread
+reduction; on TPU the map runs as scalar index_map code of O(log n)
+unrolled adds hidden behind the DMA pipeline (DESIGN.md SS2 deviation 1).
+What we measure here is the full-grid map throughput, which is what the
+XLA analogue actually pays.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractal as F
+from repro.core.domain import BandDomain, TriangularDomain
+from .common import row, time_fn
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def map_all(r):
+    i = jnp.arange(3 ** r, dtype=jnp.int32)
+    lx, ly = F.lambda_map_linear(i, r)
+    return lx + ly
+
+
+def run():
+    print("# lambda map throughput (all 3^r blocks, jitted)")
+    for r in range(4, 14):
+        us = time_fn(map_all, r, iters=10)
+        nb = 3 ** r
+        row(f"lambda_map/r={r}", us, f"blocks={nb};ns_per_block="
+            f"{1e3 * us / nb:.3f}")
+    print("# triangular decode throughput")
+    for m in (64, 256, 1024):
+        t = TriangularDomain(m)
+
+        @jax.jit
+        def dec(i):
+            k, q = t.block_coords(i)
+            return k + q
+
+        i = jnp.arange(t.num_blocks, dtype=jnp.int32)
+        us = time_fn(dec, i, iters=10)
+        row(f"tri_decode/m={m}", us,
+            f"blocks={t.num_blocks};ns_per_block="
+            f"{1e3 * us / t.num_blocks:.3f}")
+
+
+if __name__ == "__main__":
+    run()

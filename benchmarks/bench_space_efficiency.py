@@ -1,0 +1,44 @@
+"""Paper Fig. 7 (theory): parallel-space and mapping-work improvement of
+lambda(w) over bounding-box, exact closed forms (Lemmas 1-2, Theorem 2).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import fractal as F
+from repro.core.domain import (BandDomain, SierpinskiDomain,
+                               TriangularDomain)
+from .common import row
+
+
+def run(max_r: int = 16):
+    print("# Theorem 2: work ratio BB/lambda; space ratio n^2/n^H")
+    for r in range(1, max_r + 1):
+        n = 2 ** r
+        v = F.gasket_volume(n)
+        ox, oy = F.orthotope_shape(r)
+        space_ratio = (n * n) / v
+        # work model: BB does O(1) per block over n^2 blocks; lambda does
+        # O(log2 log2 n) per block over n^H blocks (paper Eq. 11)
+        work_lam = v * max(1.0, math.log2(max(2.0, math.log2(n))))
+        work_ratio = (n * n) / work_lam
+        row(f"space_eff/r={r}", 0.0,
+            f"n={n};V={v};orthotope={ox}x{oy};space_ratio="
+            f"{space_ratio:.3f};work_ratio={work_ratio:.3f}")
+    print("# block-space domains generalization (DESIGN.md SS3)")
+    for m in (64, 256, 1024):
+        row(f"domain_eff/triangular/m={m}", 0.0,
+            f"blocks={TriangularDomain(m).num_blocks};bb={m * m};"
+            f"eff={TriangularDomain(m).space_efficiency():.4f}")
+        bd = BandDomain(m, 8)
+        row(f"domain_eff/band8/m={m}", 0.0,
+            f"blocks={bd.num_blocks};bb={m * m};"
+            f"eff={bd.space_efficiency():.4f}")
+        sd = SierpinskiDomain(m)
+        row(f"domain_eff/sierpinski/m={m}", 0.0,
+            f"blocks={sd.num_blocks};bb={m * m};"
+            f"eff={sd.space_efficiency():.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Shared timing utilities for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 3, iters: int = 20,
+            sync=True) -> float:
+    """Median wall-clock microseconds per call of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+    if sync:
+        jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if sync:
+            jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(samples))
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,81 @@
+"""SS-Perf hillclimb driver: run the three selected cells through their
+optimization variants (each a dryrun --opt override set), collect the
+roofline terms, and print the iteration log table.
+
+Variants are cumulative where that matches the methodology (biggest
+predicted win first); every run lands in results/hillclimb/ so the
+before/after chain is auditable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.launch.dryrun import run_cell_subprocess
+
+# (cell, [(variant-name, opt-string or None for baseline)])
+PLAN = [
+    ("gemma3-12b", "prefill_32k", [
+        ("baseline", None),
+        ("tri", "attn_schedule=triangular"),
+        ("tri+msp", "attn_schedule=triangular,megatron_sp=true"),
+        ("tri+msp+chunk2k",
+         "attn_schedule=triangular,megatron_sp=true,attn_chunk=2048"),
+    ]),
+    ("qwen2.5-32b", "train_4k", [
+        ("baseline", None),
+        ("msp", "megatron_sp=true"),
+        ("msp+tri", "megatron_sp=true,attn_schedule=triangular"),
+        ("msp+tri+accum2",
+         "megatron_sp=true,attn_schedule=triangular,grad_accum=2"),
+    ]),
+    ("deepseek-v2-236b", "train_4k", [
+        ("baseline", None),
+        ("epdata", "ep_data=true"),
+        ("epdata+msp+tri",
+         "ep_data=true,megatron_sp=true,attn_schedule=triangular"),
+        ("epdata+msp+tri+accum8",
+         "ep_data=true,megatron_sp=true,attn_schedule=triangular,"
+         "grad_accum=8"),
+    ]),
+]
+
+
+def run(results_dir="results/hillclimb", mesh="single"):
+    os.makedirs(results_dir, exist_ok=True)
+    rows = []
+    for arch, shape, variants in PLAN:
+        for name, opt in variants:
+            out = os.path.join(results_dir,
+                               f"{arch}__{shape}__{name}.json")
+            if name == "baseline" and not os.path.exists(out):
+                base = os.path.join("results/dryrun",
+                                    f"{arch}__{shape}__{mesh}.json")
+                if os.path.exists(base):
+                    import shutil
+                    shutil.copy(base, out)
+            if not os.path.exists(out):
+                print(f"running {arch} {shape} [{name}] ...", flush=True)
+                r = run_cell_subprocess(arch, shape, mesh, out, opt=opt)
+                if r.returncode != 0 or not os.path.exists(out):
+                    print(f"  FAILED:\n{r.stdout[-1500:]}\n"
+                          f"{r.stderr[-3000:]}")
+                    continue
+            rec = json.load(open(out))
+            rec = rec if isinstance(rec, dict) else rec[0]
+            ro = rec["roofline"]
+            rows.append((arch, shape, name, rec["mem"]["peak_est_gib"],
+                         ro["compute_s"], ro["memory_s"],
+                         ro["collective_s"], ro["dominant"],
+                         ro["useful_ratio"], ro["roofline_frac"]))
+    print("\narch,shape,variant,mem_gib,compute_s,memory_s,collective_s,"
+          "bound,useful_ratio,roofline_frac")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]},{r[3]:.1f},{r[4]:.3f},{r[5]:.3f},"
+              f"{r[6]:.3f},{r[7]},{r[8]:.3f},{r[9]:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(*(sys.argv[1:]))

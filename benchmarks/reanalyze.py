@@ -1,0 +1,66 @@
+"""Re-run the HLO cost walker over saved .hlo.gz artifacts and refresh
+the roofline block of each results JSON -- lets walker improvements
+propagate without recompiling the 66 cells."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def reanalyze(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    rec = json.load(open(json_path))
+    single = isinstance(rec, dict)
+    recs = [rec] if single else rec
+    with gzip.open(hlo_path, "rt") as f:
+        txt = f.read()
+    cost = hlo_analysis.analyze(txt)
+    for r in recs:
+        useful = r["roofline"]["model_flops_total"]
+        chips = r["chips"]
+        compute_s = cost.flops / PEAK_FLOPS
+        memory_s = cost.bytes_accessed / HBM_BW
+        coll_s = cost.coll_wire_bytes / ICI_BW
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", coll_s)), key=lambda kv: kv[1])[0]
+        r["hlo"].update({
+            "flops_per_dev": cost.flops,
+            "bytes_per_dev": cost.bytes_accessed,
+            "coll_bytes_per_dev": cost.coll_bytes,
+            "coll_wire_bytes_per_dev": cost.coll_wire_bytes,
+            "coll_by_type": dict(cost.coll_by_type),
+            "coll_count": dict(cost.coll_count),
+            "bytes_by_op": dict(sorted(cost.bytes_by_op.items(),
+                                       key=lambda kv: -kv[1])[:12]),
+        })
+        r["roofline"].update({
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "useful_ratio": useful / chips / max(cost.flops, 1.0),
+            "roofline_s": max(compute_s, memory_s, coll_s),
+            "roofline_frac": min(1.0, useful / chips / PEAK_FLOPS
+                                 / max(compute_s, memory_s, coll_s)),
+        })
+    json.dump(rec, open(json_path, "w"), indent=2)
+    return True
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    n = 0
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if reanalyze(p):
+            n += 1
+    print(f"reanalyzed {n} cells in {d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md SS-Roofline tables from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(f))
+        recs.extend(r if isinstance(r, list) else [r])
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    hdr = ("| arch | shape | mem/dev | compute | memory | collective | "
+           "bound | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    recs = [r for r in recs if r["mesh"] == mesh]
+    recs.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])))
+    for r in recs:
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['mem']['peak_est_gib']:.1f}G | "
+            f"{fmt_s(ro['compute_s'])} | {fmt_s(ro['memory_s'])} | "
+            f"{fmt_s(ro['collective_s'])} | {ro['dominant'][:4]} | "
+            f"{ro['useful_ratio']:.3f} | {ro['roofline_frac']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    out = []
+    by_dom = defaultdict(int)
+    for r in recs:
+        if r["mesh"] == "16x16":
+            by_dom[r["roofline"]["dominant"]] += 1
+    out.append(f"bound distribution (single pod): {dict(by_dom)}")
+    worst = sorted((r for r in recs if r["mesh"] == "16x16"),
+                   key=lambda r: r["roofline"]["roofline_frac"])[:5]
+    out.append("worst roofline fractions: " + ", ".join(
+        f"{r['arch']}/{r['shape']}={r['roofline']['roofline_frac']:.3f}"
+        for r in worst))
+    coll = sorted((r for r in recs if r["mesh"] == "16x16"),
+                  key=lambda r: -r["roofline"]["collective_s"])[:5]
+    out.append("most collective-bound: " + ", ".join(
+        f"{r['arch']}/{r['shape']}={fmt_s(r['roofline']['collective_s'])}"
+        for r in coll))
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    print(f"cells loaded: {len(recs)}")
+    print("\n## single-pod (16x16 = 256 chips)\n")
+    print(table(recs, "16x16"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(table(recs, "2x16x16"))
+    print("\n## summary\n")
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: map,space,time,ca,attn")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_attention_domains, bench_ca, bench_map_time,
+                   bench_sierpinski_map, bench_space_efficiency)
+
+    print("name,us_per_call,derived")
+    if only is None or "map" in only:
+        bench_sierpinski_map.run()
+    if only is None or "space" in only:
+        bench_space_efficiency.run()
+    if only is None or "time" in only:
+        bench_map_time.run()
+    if only is None or "ca" in only:
+        bench_ca.run()
+    if only is None or "attn" in only:
+        bench_attention_domains.run()
+
+
+if __name__ == '__main__':
+    main()

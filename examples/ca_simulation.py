@@ -1,0 +1,53 @@
+"""Cellular-automaton simulation on the embedded Sierpinski gasket --
+the data-parallel application class from the paper's introduction
+(Wolfram-style parity CA + heat diffusion), running on the block-space
+Pallas kernels with the classic double-buffer scheme.
+
+Run:  PYTHONPATH=src python examples/ca_simulation.py [--steps 16]
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractal as F
+from repro.kernels import ops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--block", type=int, default=8)
+    ap.add_argument("--rule", default="parity",
+                    choices=["parity", "diffusion"])
+    args = ap.parse_args()
+    n = args.n
+
+    mask = F.membership_grid(n)
+    # seed: single live cell at the bottom-left corner of the gasket
+    state = np.zeros((n, n), np.float32)
+    state[n - 1, 0] = 1.0
+    if args.rule == "diffusion":
+        state[n - 1, 0] = 100.0
+    a = jnp.asarray(state * mask)
+    b = jnp.zeros_like(a)
+
+    total0 = float(jnp.sum(a))
+    for t in range(args.steps):
+        new = ops.ca_step(a, b, rule=args.rule, block=args.block,
+                          grid_mode="compact")
+        b, a = a, new
+        live = int(jnp.sum(a > 0))
+        print(f"step {t + 1:3d}: active cells = {live}")
+
+    if args.rule == "diffusion":
+        total = float(jnp.sum(a))
+        print(f"heat conserved: {total0:.3f} -> {total:.3f}")
+    # zero outside the fractal is an invariant of the kernel
+    assert (np.asarray(a)[~mask] == 0).all()
+    print("invariant OK: state is zero outside the gasket")
+
+
+if __name__ == "__main__":
+    main()

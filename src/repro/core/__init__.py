@@ -1,0 +1,11 @@
+# The paper's primary contribution: the block-space fractal map lambda(w)
+# and its generalization to block-structured sparse compute domains.
+from . import domain, fractal
+from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
+                     GeneralizedFractalDomain, SierpinskiDomain,
+                     TriangularDomain, make_attention_domain)
+from .fractal import (CARPET, FRACTALS, HAUSDORFF, SIERPINSKI, VICSEK,
+                      FractalSpec, all_block_coords, gasket_volume,
+                      is_member, lambda_inverse, lambda_map,
+                      lambda_map_linear, membership_grid, orthotope_shape,
+                      pack_to_orthotope, scale_level, unpack_from_orthotope)

@@ -1,0 +1,239 @@
+"""Block-space domains: compact grid enumerations of structured-sparse
+block sets, generalizing the paper's lambda(w) beyond fractals.
+
+A BlockDomain answers two questions for a Pallas (or XLA-level) kernel:
+
+  * ``num_blocks`` -- how many grid steps to launch (the paper's
+    parallel-space volume), and
+  * ``block_coords(i)`` -- traceable scalar int math mapping the linear
+    grid index to the 2-D block coordinate in the *embedded* space (the
+    paper's lambda).
+
+The bounding-box baseline is itself a domain, so every kernel can A/B
+exactly as the paper does.  ``coords_host()`` gives the same enumeration
+as a host numpy array, used for (a) oracle tests and (b) the
+scalar-prefetch lookup-table variant (the TPU analogue of the paper's
+"shared lookup table" intra-block option).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fractal as F
+
+
+class BlockDomain:
+    """Interface; block coords are (bx, by) with y the row (downwards)."""
+
+    name: str = "abstract"
+
+    @property
+    def num_blocks(self) -> int:
+        raise NotImplementedError
+
+    def block_coords(self, i):
+        """Linear grid index -> (bx, by); must be jax-traceable int math."""
+        raise NotImplementedError
+
+    def contains(self, bx, by):
+        """Membership test in the embedded block space (traceable)."""
+        raise NotImplementedError
+
+    def coords_host(self) -> np.ndarray:
+        """(num_blocks, 2) int32 enumeration on host (oracle + lookup table)."""
+        i = np.arange(self.num_blocks, dtype=np.int64)
+        bx, by = self.block_coords(i)
+        return np.stack([np.asarray(bx), np.asarray(by)], -1).astype(np.int32)
+
+    def space_efficiency(self) -> float:
+        """Fraction of bounding-box blocks that are real work (Theorem 2)."""
+        bb = self.bounding_box
+        return self.num_blocks / float(bb[0] * bb[1])
+
+    @property
+    def bounding_box(self) -> Tuple[int, int]:
+        raise NotImplementedError
+
+
+class BoundingBoxDomain(BlockDomain):
+    """The paper's baseline: launch every block of the n_b x n_b box and
+    let the kernel discard non-members at run time."""
+
+    name = "bounding-box"
+
+    def __init__(self, nbx: int, nby: int, member=None):
+        self.nbx, self.nby = nbx, nby
+        self._member = member
+
+    @property
+    def num_blocks(self) -> int:
+        return self.nbx * self.nby
+
+    @property
+    def bounding_box(self):
+        return (self.nbx, self.nby)
+
+    def block_coords(self, i):
+        return i % self.nbx, i // self.nbx
+
+    def contains(self, bx, by):
+        if self._member is None:
+            return (bx == bx)  # all true, shape-following
+        return self._member(bx, by)
+
+
+class SierpinskiDomain(BlockDomain):
+    """The paper, faithfully: 3**r_b blocks mapped by lambda (Eq. 4-10)."""
+
+    name = "sierpinski"
+
+    def __init__(self, n_b: int):
+        self.n_b = n_b
+        self.r_b = F.scale_level(n_b)
+
+    @property
+    def num_blocks(self) -> int:
+        return 3 ** self.r_b
+
+    @property
+    def bounding_box(self):
+        return (self.n_b, self.n_b)
+
+    def block_coords(self, i):
+        return F.lambda_map_linear(i, self.r_b)
+
+    def contains(self, bx, by):
+        return F.is_member(bx, by, self.n_b)
+
+
+class GeneralizedFractalDomain(BlockDomain):
+    """Paper SS V future-work question 1: any F^{k,s} digit-unrolled fractal."""
+
+    name = "generalized-fractal"
+
+    def __init__(self, spec: F.FractalSpec, n_b: int):
+        self.spec = spec
+        self.n_b = n_b
+        self.r_b = spec.scale_level(n_b)
+        self.name = f"fractal:{spec.name}"
+
+    @property
+    def num_blocks(self) -> int:
+        return self.spec.k ** self.r_b
+
+    @property
+    def bounding_box(self):
+        return (self.n_b, self.n_b)
+
+    def block_coords(self, i):
+        return self.spec.lambda_map_linear(i, self.r_b)
+
+    def contains(self, bx, by):
+        g = self.spec.membership_grid(self.n_b)
+        return jnp.asarray(g)[by, bx]
+
+
+def _isqrt(x):
+    """Traceable integer sqrt for the triangular decode (related work [18]
+    solves an order-m equation; here m=2 so it is a square root).  float32
+    sqrt + correction steps is exact for x < 2**24, i.e. block grids up to
+    m ~ 5790 (seq 2.9M at 512-token blocks) -- asserted by the domains."""
+    x = jnp.asarray(x, jnp.int32)
+    s = jnp.asarray(jnp.floor(jnp.sqrt(jnp.asarray(x, jnp.float32))), jnp.int32)
+    for _ in range(2):
+        s = jnp.where((s + 1) * (s + 1) <= x, s + 1, s)
+        s = jnp.where(s * s > x, s - 1, s)
+    return s
+
+
+class TriangularDomain(BlockDomain):
+    """Causal (lower-triangular) block domain over m x m blocks: the
+    2-simplex case of the authors' block-space program, and the domain of
+    causal attention.  T(m) = m(m+1)/2 blocks instead of m**2."""
+
+    name = "triangular"
+
+    def __init__(self, m: int):
+        if m * (m + 1) // 2 >= 2 ** 24:
+            raise ValueError("triangular decode exact only below 2**24 blocks")
+        self.m = m
+
+    @property
+    def num_blocks(self) -> int:
+        return self.m * (self.m + 1) // 2
+
+    @property
+    def bounding_box(self):
+        return (self.m, self.m)
+
+    def block_coords(self, i):
+        # row q = floor((sqrt(8i+1)-1)/2); col k = i - q(q+1)/2  (k <= q)
+        q = (_isqrt(8 * jnp.asarray(i, jnp.int32) + 1) - 1) // 2
+        k = jnp.asarray(i, jnp.int32) - q * (q + 1) // 2
+        if isinstance(i, (int, np.integer)):
+            return int(k), int(q)
+        return k, q  # (bx=key block, by=query block)
+
+    def contains(self, bx, by):
+        return bx <= by
+
+
+class BandDomain(BlockDomain):
+    """Sliding-window (local) attention block domain: key block kj in
+    [max(0, qi-w+1), qi] for each query block qi.  Blocks:
+    T(w) + (m-w)*w   vs   bounding box m**2."""
+
+    name = "band"
+
+    def __init__(self, m: int, w: int):
+        if w > m:
+            w = m
+        self.m, self.w = m, w
+        self._tw = w * (w + 1) // 2
+
+    @property
+    def num_blocks(self) -> int:
+        return self._tw + (self.m - self.w) * self.w
+
+    @property
+    def bounding_box(self):
+        return (self.m, self.m)
+
+    def block_coords(self, i):
+        i = jnp.asarray(i, jnp.int32)
+        tw = self._tw
+        # triangular head (rows 0..w-1), then dense band rows of width w
+        q_tri = (_isqrt(8 * i + 1) - 1) // 2
+        k_tri = i - q_tri * (q_tri + 1) // 2
+        j = i - tw
+        q_band = self.w + j // self.w
+        k_band = q_band - self.w + 1 + j % self.w
+        in_tri = i < tw
+        q = jnp.where(in_tri, q_tri, q_band)
+        k = jnp.where(in_tri, k_tri, k_band)
+        return k, q
+
+    def contains(self, bx, by):
+        return (bx <= by) & (bx > by - self.w)
+
+
+def make_attention_domain(kind: str, m_q: int, m_k: int, window_blocks: int = 0):
+    """Factory used by the attention kernels.
+
+    kind: "causal" -> TriangularDomain (requires m_q == m_k),
+          "local"  -> BandDomain,
+          "full"   -> BoundingBoxDomain (bidirectional / baseline).
+    """
+    if kind == "causal":
+        if m_q != m_k:
+            raise ValueError("causal triangular domain needs square block grid")
+        return TriangularDomain(m_q)
+    if kind == "local":
+        return BandDomain(m_q, window_blocks)
+    if kind == "full":
+        return BoundingBoxDomain(m_k, m_q)
+    raise ValueError(kind)

@@ -1,0 +1,267 @@
+"""Faithful implementation of the paper's block-space Sierpinski map.
+
+Notation follows Navarro, Bustos, Vega, Hitschfeld (2017),
+"Block-space GPU Mapping for Embedded Sierpinski Gasket Fractals":
+
+* the discrete gasket of scale level ``r`` lives embedded in an
+  ``n x n`` grid with ``n = 2**r``, origin at the top-left, ``y``
+  increasing downwards.  Membership test (paper SS III.D.3):
+  ``x & (n - 1 - y) == 0``.
+* the gasket packs into a 2-orthotope of ``3**ceil(r/2) x 3**floor(r/2)``
+  blocks (Lemma 2) via an alternating base-3 digit unrolling: odd scale
+  levels consume base-3 digits of ``w_y``, even levels of ``w_x``.
+* ``lambda(w)`` (Eq. 4-10) accumulates, per scale level ``mu``, a region
+  offset ``tau^mu = Delta_mu * 2**(mu-1)`` with region index
+  ``beta_mu(w) in {0, 1, 2}`` (0 = top, 1 = bottom-left, 2 = bottom-right).
+
+Everything here is pure index math on jnp int32 arrays so the same code
+runs (a) on host for table construction, (b) inside jit, and (c) inside
+Pallas ``BlockSpec.index_map`` scalar code (via the *_py variants which
+unroll at trace time).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HAUSDORFF = math.log2(3.0)  # H = log2(3) ~ 1.5849625 (Lemma 1)
+
+
+# ---------------------------------------------------------------------------
+# Scalar / host-side helpers
+# ---------------------------------------------------------------------------
+
+def scale_level(n: int) -> int:
+    """r = log2(n); n must be a power of two (paper: r = log_{1/s}(n), s=1/2)."""
+    r = int(round(math.log2(n)))
+    if 2 ** r != n:
+        raise ValueError(f"n={n} is not a power of two")
+    return r
+
+
+def gasket_volume(n: int) -> int:
+    """V(F_n^{3,1/2}) = 3**r = n**H   (Lemma 1)."""
+    return 3 ** scale_level(n)
+
+
+def orthotope_shape(r: int) -> Tuple[int, int]:
+    """Packing orthotope (width_x, height_y) of the level-r gasket (Lemma 2).
+
+    Odd scale levels mu=1,3,5,... consume base-3 digits of w_y, so w_y has
+    ceil(r/2) digits; even levels consume digits of w_x -> floor(r/2) digits.
+    The orthotope is therefore 3**floor(r/2) wide and 3**ceil(r/2) tall,
+    matching the paper's (quasi-)regular 3**ceil(r/2) x 3**floor(r/2) up to
+    the (width, height) naming convention.
+    """
+    return 3 ** (r // 2), 3 ** ((r + 1) // 2)
+
+
+def is_member(x, y, n: int):
+    """Embedded-space membership bit test: x & (n - 1 - y) == 0.
+
+    Apex at (0,0); left edge x == 0 always member; bottom row y == n-1 full.
+    Works on python ints and jnp arrays alike.
+    """
+    return (x & (n - 1 - y)) == 0
+
+
+# ---------------------------------------------------------------------------
+# The paper's map, Eq. (4) - (10)
+# ---------------------------------------------------------------------------
+
+def beta_mu(wx, wy, mu: int):
+    """Region index beta_mu(w) in {0,1,2} at scale level mu  (Eq. 4)."""
+    sel = wx * ((mu + 1) % 2) + wy * (mu % 2)      # odd mu -> w_y, even -> w_x
+    return (sel // 3 ** ((mu + 1) // 2 - 1)) % 3
+
+
+def delta_mu(beta):
+    """Offset weights (Delta_x, Delta_y) in {0,1}^2 for a region index (Eq. 5)."""
+    dx = beta // 2
+    dy = beta - dx
+    return dx, dy
+
+
+def lambda_map(wx, wy, r: int):
+    """lambda(w): orthotope block coords -> embedded fractal block coords.
+
+    Faithful Eq. (8)-(10): sum over scale levels mu = 1..r of
+    tau^mu = Delta_mu * 2**(mu-1).  The mu loop is unrolled at trace time
+    (r is static), so inside jit/Pallas-index_map this is straight-line
+    scalar int math -- the TPU analogue of the paper's per-block map.
+
+    Accepts ints or jnp int arrays (vectorized over w).
+    """
+    lx = wx * 0
+    ly = wy * 0
+    for mu in range(1, r + 1):
+        b = beta_mu(wx, wy, mu)
+        dx, dy = delta_mu(b)
+        lx = lx + dx * 2 ** (mu - 1)
+        ly = ly + dy * 2 ** (mu - 1)
+    return lx, ly
+
+
+def lambda_map_linear(i, r: int):
+    """lambda over a *linear* grid index i in [0, 3**r).
+
+    Pallas grids are iterated linearly; rather than first splitting i into
+    (w_x, w_y) and re-extracting alternating base-3 digits, note that the
+    digit stream of i in base 3 IS the sequence (beta_1, beta_2, ..., beta_r)
+    under the paper's alternating unrolling (odd digits come from w_y, even
+    from w_x; concatenating them is exactly i = interleave(w_y, w_x) in
+    base 3).  This is the same bijection with one fewer divmod chain.
+    """
+    lx = i * 0
+    ly = i * 0
+    for mu in range(1, r + 1):
+        b = (i // 3 ** (mu - 1)) % 3
+        dx, dy = delta_mu(b)
+        lx = lx + dx * 2 ** (mu - 1)
+        ly = ly + dy * 2 ** (mu - 1)
+    return lx, ly
+
+
+def lambda_inverse(x, y, r: int):
+    """Inverse map: embedded fractal block coords -> orthotope coords.
+
+    For each scale level mu the region is recovered from bit mu-1 of (x, y):
+    (0,0) -> beta 0, (0,1) -> beta 1, (1,1) -> beta 2.  ((1,0) never occurs
+    for members.)  The betas are then re-packed into the alternating base-3
+    digits of (w_x, w_y).
+    """
+    wx = x * 0
+    wy = y * 0
+    px = x * 0 + 1  # 3**(even-digit position)
+    py = y * 0 + 1
+    for mu in range(1, r + 1):
+        bx = (x >> (mu - 1)) & 1
+        by = (y >> (mu - 1)) & 1
+        b = bx + by  # (0,0)->0 (0,1)->1 (1,1)->2
+        if mu % 2 == 1:
+            wy = wy + b * py
+            py = py * 3
+        else:
+            wx = wx + b * px
+            px = px * 3
+    return wx, wy
+
+
+# ---------------------------------------------------------------------------
+# Generalized F^{k,s} fractals (paper SS V, future-work question 1)
+# ---------------------------------------------------------------------------
+
+class FractalSpec:
+    """A self-similar fractal built from k copies at scale s with integer
+    per-copy offsets, generalizing the gasket's (k=3, s=1/2).
+
+    offsets: tuple of (dx, dy) unit offsets in {0..m-1}^2 where m = 1/s is
+    the integer subdivision factor.  Level-mu copy c sits at
+    offsets[c] * m**(mu-1).
+    """
+
+    def __init__(self, name: str, k: int, m: int, offsets):
+        if len(offsets) != k:
+            raise ValueError("need one offset per copy")
+        self.name, self.k, self.m = name, k, m
+        self.offsets = tuple(tuple(o) for o in offsets)
+
+    @property
+    def hausdorff(self) -> float:
+        return math.log(self.k) / math.log(self.m)
+
+    def scale_level(self, n: int) -> int:
+        r = int(round(math.log(n, self.m)))
+        if self.m ** r != n:
+            raise ValueError(f"n={n} is not a power of m={self.m}")
+        return r
+
+    def volume(self, n: int) -> int:
+        return self.k ** self.scale_level(n)
+
+    def lambda_map_linear(self, i, r: int):
+        """Generalized digit-unrolled map: base-k digits of i choose copies."""
+        lx = i * 0
+        ly = i * 0
+        dxs = np.array([o[0] for o in self.offsets])
+        dys = np.array([o[1] for o in self.offsets])
+        for mu in range(1, r + 1):
+            c = (i // self.k ** (mu - 1)) % self.k
+            if isinstance(i, (int, np.integer)):
+                dx, dy = int(dxs[c]), int(dys[c])
+            else:
+                dx = jnp.asarray(dxs)[c]
+                dy = jnp.asarray(dys)[c]
+            lx = lx + dx * self.m ** (mu - 1)
+            ly = ly + dy * self.m ** (mu - 1)
+        return lx, ly
+
+    def membership_grid(self, n: int) -> np.ndarray:
+        """Dense boolean n x n occupancy via recursive construction (oracle)."""
+        r = self.scale_level(n)
+        g = np.ones((1, 1), dtype=bool)
+        for mu in range(1, r + 1):
+            size = self.m ** (mu - 1)
+            big = np.zeros((size * self.m, size * self.m), dtype=bool)
+            for (dx, dy) in self.offsets:
+                big[dy * size:(dy + 1) * size, dx * size:(dx + 1) * size] |= g
+            g = big
+        return g
+
+
+SIERPINSKI = FractalSpec("sierpinski-gasket", k=3, m=2,
+                         offsets=((0, 0), (0, 1), (1, 1)))
+# Sierpinski carpet: 8 copies at 1/3 scale (center removed), H = log3(8).
+CARPET = FractalSpec("sierpinski-carpet", k=8, m=3,
+                     offsets=((0, 0), (1, 0), (2, 0),
+                              (0, 1), (2, 1),
+                              (0, 2), (1, 2), (2, 2)))
+# Vicsek cross: 5 copies at 1/3 scale, H = log3(5).
+VICSEK = FractalSpec("vicsek-cross", k=5, m=3,
+                     offsets=((1, 0), (0, 1), (1, 1), (2, 1), (1, 2)))
+
+FRACTALS = {f.name: f for f in (SIERPINSKI, CARPET, VICSEK)}
+
+
+# ---------------------------------------------------------------------------
+# Vectorized/device utilities
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("r",))
+def all_block_coords(r: int) -> jnp.ndarray:
+    """(3**r, 2) int32 array of embedded coords for every gasket block,
+    enumerated in linear lambda order (the canonical compact layout order).
+    """
+    i = jnp.arange(3 ** r, dtype=jnp.int32)
+    lx, ly = lambda_map_linear(i, r)
+    return jnp.stack([lx, ly], axis=-1)
+
+
+def membership_grid(n: int) -> np.ndarray:
+    """Dense boolean occupancy of the embedded gasket via the bit test."""
+    y, x = np.mgrid[0:n, 0:n]
+    return (x & (n - 1 - y)) == 0
+
+
+def pack_to_orthotope(grid: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Gather an embedded n x n array into the compact (3**ceil, 3**floor)
+    orthotope layout (Lemma 2).  grid[y, x] -> packed[w_y, w_x]."""
+    ox, oy = orthotope_shape(r)
+    wy, wx = jnp.mgrid[0:oy, 0:ox]
+    lx, ly = lambda_map(wx, wy, r)
+    return grid[ly, lx]
+
+
+def unpack_from_orthotope(packed: jnp.ndarray, r: int, n: int,
+                          fill=0) -> jnp.ndarray:
+    """Scatter the compact orthotope layout back into the embedded n x n."""
+    ox, oy = orthotope_shape(r)
+    wy, wx = jnp.mgrid[0:oy, 0:ox]
+    lx, ly = lambda_map(wx, wy, r)
+    out = jnp.full((n, n) + packed.shape[2:], fill, dtype=packed.dtype)
+    return out.at[ly, lx].set(packed)

@@ -1,0 +1,4 @@
+from . import sharding
+from .sharding import (act_specs, activation_specs, batch_specs,
+                       cache_spec_tree, constrain, dp_axes,
+                       named_sharding_tree, param_spec_tree)

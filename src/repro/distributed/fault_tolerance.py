@@ -1,0 +1,85 @@
+"""Fault-tolerance runtime pieces that live OUTSIDE the jitted step:
+
+* ``Heartbeat``        -- per-step deadline watchdog (straggler/hang
+                          detection).  On a real fleet the callback would
+                          page the controller to re-shard around the slow
+                          host; here it records the event and (optionally)
+                          raises so the launcher can restart from the last
+                          checkpoint.
+* ``PreemptionGuard``  -- SIGTERM-aware flag: the train loop checks it
+                          every step and checkpoints before exiting, which
+                          is how TPU preemption notices are handled.
+* ``retry_step``       -- re-execute a step function on transient device
+                          errors with exponential backoff, restoring from
+                          the last good state.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Optional
+
+
+class Heartbeat:
+    def __init__(self, deadline_s: float = 300.0,
+                 on_straggle: Optional[Callable[[float], None]] = None):
+        self.deadline_s = deadline_s
+        self.on_straggle = on_straggle
+        self.last = time.monotonic()
+        self.straggle_events = 0
+
+    def beat(self):
+        now = time.monotonic()
+        dt = now - self.last
+        self.last = now
+        if dt > self.deadline_s:
+            self.straggle_events += 1
+            if self.on_straggle:
+                self.on_straggle(dt)
+        return dt
+
+
+class PreemptionGuard:
+    """Install with ``with PreemptionGuard() as g: ... if g.fired: ...``"""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.signals = signals
+        self.fired = False
+        self._old = {}
+
+    def _handler(self, signum, frame):
+        self.fired = True
+
+    def __enter__(self):
+        for s in self.signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, old in self._old.items():
+            signal.signal(s, old)
+        return False
+
+
+def retry_step(fn, *args, retries: int = 3, backoff_s: float = 1.0,
+               on_retry: Optional[Callable[[int, Exception], None]] = None):
+    """Run ``fn(*args)`` retrying on transient XLA/runtime errors."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args)
+        except (RuntimeError, jax_runtime_errors()) as e:  # pragma: no cover
+            attempt += 1
+            if attempt > retries:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+def jax_runtime_errors():
+    try:
+        from jax.errors import JaxRuntimeError
+        return JaxRuntimeError
+    except Exception:  # pragma: no cover
+        return RuntimeError

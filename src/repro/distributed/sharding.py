@@ -1,0 +1,223 @@
+"""Sharding rules: name-pattern parameter PartitionSpecs, activation
+constraints, and the DP/TP/EP/SP mapping onto the (pod, data, model) mesh.
+
+Axis semantics:
+  * ``pod``   -- outermost data parallelism across pods (multi-pod mesh)
+  * ``data``  -- intra-pod data parallelism (batch); doubles as the FSDP
+                 axis for expert weights on the big MoE archs and as the
+                 sequence axis for long-context decode caches
+  * ``model`` -- tensor parallelism (heads / ffn hidden / experts / vocab)
+
+Activation constraints are injected through a contextvar so the model
+code stays mesh-agnostic: ``constrain(x, "residual")`` is a no-op unless
+the launcher installed specs for the current trace.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")   # batch axes (pod may be absent on 1-pod mesh)
+
+
+_ACT_SPECS: contextvars.ContextVar[Optional[Dict[str, NamedSharding]]] = \
+    contextvars.ContextVar("activation_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_specs(specs: Dict[str, NamedSharding]):
+    tok = _ACT_SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _ACT_SPECS.reset(tok)
+
+
+def constrain(x, name: str):
+    specs = _ACT_SPECS.get()
+    if specs is None or name not in specs:
+        return x
+    return jax.lax.with_sharding_constraint(x, specs[name])
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by name pattern
+# ---------------------------------------------------------------------------
+
+# (regex over the '/'-joined param path, spec builder).  `fsdp_axes`
+# enables sharding the big expert / ffn / lora weights over the data
+# (and pod) axes too (ZeRO-3 style); `stacked` handles the leading
+# scan-group dimension.
+def _rules(fsdp_axes, ep_data: bool = False):
+    dat = fsdp_axes if fsdp_axes else None
+    if ep_data:
+        # gather-free expert parallelism: experts stationary, sharded
+        # E over 'data' and F over 'model'; tokens move (all-to-all)
+        expert_rules = [
+            (r"ffn/router$",  P(None, None)),
+            (r"ffn/w[ig]$",   P("data", None, "model")),
+            (r"ffn/wo$",      P("data", "model", None)),
+        ]
+    else:
+        expert_rules = [
+            (r"ffn/router$",  P(dat, None)),
+            (r"ffn/w[ig]$",   P("model", None, dat)),
+            (r"ffn/wo$",      P("model", dat, None)),
+        ]
+    return expert_rules + [
+        (r"embed/table$",            P("model", None)),
+        (r"lm_head/w$",              P(None, "model")),
+        # attention
+        (r"(mixer|attn)/w[qkv]$",    P(None, "model")),
+        (r"(mixer|attn)/wo$",        P("model", None)),
+        (r"(mixer|attn)/b[qkv]$",    P("model")),
+        # MLA
+        (r"mixer/wq_a$",             P(dat, None)),
+        (r"mixer/wq_b$",             P(None, "model")),
+        (r"mixer/wkv_a$",            P(dat, None)),
+        (r"mixer/wkv_b$",            P(None, "model")),
+        (r"mixer/(q|kv)_norm$",      P(None)),
+        # dense mlp
+        (r"(ffn|mlp|shared)/w[ig]$", P(dat, "model")),
+        (r"(ffn|mlp|shared)/wo$",    P("model", dat)),
+        # mamba
+        (r"mixer/in_proj$",          P(None, "model")),
+        (r"mixer/conv_w$",           P("model", None)),
+        (r"mixer/conv_b$",           P("model")),
+        (r"mixer/x_proj$",           P("model", None)),
+        (r"mixer/dt_proj$",          P(None, "model")),
+        (r"mixer/dt_bias$",          P("model")),
+        (r"mixer/A_log$",            None),  # shape-dependent, see below
+        (r"mixer/D$",                P("model")),
+        (r"mixer/norm_scale$",       P("model")),
+        (r"mixer/out_proj$",         P("model", None)),
+        # shared-attn in_proj, norms, everything small: replicate
+        (r"shared_attn/in_proj$",    P(None, None)),
+        (r".*norm.*",                P()),
+        (r".*",                      P()),
+    ]
+
+
+def param_spec_tree(params, cfg=None, *, fsdp: bool = False,
+                    fsdp_axes=("data",), ep_data: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs
+    too).  Leaves under `blocks/` carry a leading scan dim -> prepend None.
+    """
+    rules = _rules(tuple(fsdp_axes) if fsdp else None, ep_data=ep_data)
+
+    def spec_for(path_str: str, ndim: int, stacked: bool):
+        base_ndim = ndim - 1 if stacked else ndim
+        for pat, spec in rules:
+            if re.search(pat, path_str):
+                if spec is None:  # A_log: (di,n) for mamba1, (nh,) for m2
+                    spec = P("model", None) if base_ndim == 2 else P("model")
+                if len(spec) > base_ndim:
+                    continue  # rule for a higher-rank leaf (e.g. expert
+                              # (E,D,F) rule vs a dense (D,F) ffn)
+                spec = P(*(tuple(spec) + (None,) * (base_ndim - len(spec))))
+                if stacked:
+                    spec = P(None, *spec)
+                return spec
+        return P()
+
+    def walk(path, leaf):
+        path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+        stacked = path_str.startswith("blocks/")
+        return spec_for(path_str, leaf.ndim, stacked)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, input_mode: str):
+    """Input shardings for a train/prefill batch."""
+    dp = dp_axes(mesh)
+    if input_mode == "tokens":
+        inp = P(dp, None)
+    else:
+        inp = P(dp, None, None)
+    return {"inputs": NamedSharding(mesh, inp),
+            "labels": NamedSharding(mesh, P(dp, None))}
+
+
+def act_specs(mesh: Mesh, *, seq_shard: bool = False,
+              ep_data: bool = False):
+    """Residual-stream activation constraint.  seq_shard=True shards the
+    sequence over 'model' (sequence parallelism between blocks)."""
+    dp = dp_axes(mesh)
+    spec = P(dp, "model", None) if seq_shard else P(dp, None, None)
+    all_axes = dp + ("model",)
+    ep_ax = "data" if ep_data else "model"
+    return {"residual": NamedSharding(mesh, spec),
+            # MoE dispatch buffer: expert-major rows (EP axis)
+            "moe_experts": NamedSharding(mesh, P(ep_ax, None, None)),
+            # flat token tables: rows over every mesh axis
+            "moe_tokens": NamedSharding(mesh, P(all_axes, None)),
+            # Megatron TP intermediates (see ModelConfig.megatron_sp)
+            "mlp_hidden": NamedSharding(mesh, P(dp, None, "model")),
+            "attn_heads": NamedSharding(mesh, P(dp, "model", None, None))}
+
+
+def cache_spec_tree(cache_shapes, cfg, mesh: Mesh, batch: int):
+    """KV/state cache shardings, matched on exact shapes from the config.
+    Batch >= dp size -> shard batch; else shard the sequence axis over
+    'data' (long-context single-request serving)."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_sharded = batch >= dp_size and batch % dp_size == 0
+    bax = dp if batch_sharded else None
+    sax = None if batch_sharded else "data"
+
+    tp = mesh.shape["model"]
+
+    def leaf(path, x):
+        path_str = "/".join(str(getattr(k, "key", k)) for k in path)
+        stacked = path_str.startswith("blocks/")
+        shape = x.shape[1:] if stacked else x.shape
+        nd = len(shape)
+        if nd == 4 and shape[1] == cfg.n_kv_heads and shape[3] == cfg.hd:
+            # attn kv (B, Hkv, S, hd): heads over model when divisible,
+            # else the head dim (GQA kv=8 on tp=16)
+            if cfg.n_kv_heads % tp == 0:
+                spec = P(bax, "model", sax, None)
+            else:
+                spec = P(bax, None, sax, "model")
+        elif nd == 4:
+            # mamba2 h (B, nh, N, P): heads over model
+            spec = P(bax, "model" if cfg.ssd_heads % tp == 0 else None,
+                     None, None)
+        elif nd == 3 and shape[1] == cfg.d_inner and cfg.ssm_kind:
+            # mamba1 h (B, di, n): channels over model
+            spec = P(bax, "model", None)
+        elif nd == 3 and cfg.ssm_kind and shape[1] == cfg.conv_kernel - 1:
+            # conv cache (B, K-1, C): channels over model
+            spec = P(bax, None, "model")
+        elif nd == 3:
+            # mla latents (B, S, L/dr): seq over data when not batch-sharded
+            spec = P(bax, sax, None)
+        else:
+            spec = P(*([bax] + [None] * (nd - 1)))
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

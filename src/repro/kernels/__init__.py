@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   sierpinski_write -- the paper's SS IV microbenchmark (lambda vs BB grid)
+#   sierpinski_ca    -- nearest-neighbour CA/diffusion on the gasket
+#   flash_attention  -- block-space (compact triangular/band grid) attention
+# Each kernel module has its pure-jnp oracle in ref.py and its public
+# jit'd wrapper re-exported via ops.py.
+from . import ref
+from .ops import ca_step, flash_attention, sierpinski_sum, sierpinski_write

@@ -1,0 +1,199 @@
+"""Block-space flash attention: the paper's compact-grid technique applied
+to the dominant kernel of the assigned LM architectures.
+
+The (q_block, k_block) pairs of causal attention form a lower-triangular
+block domain -- the 2-simplex case of the authors' block-space program
+[Navarro et al. 2014/2016].  Instead of launching the bounding-box grid
+``m_q x m_k`` and discarding invalid blocks at run time (the standard
+masked-flash formulation), the compact grid launches exactly
+``T(m) = m(m+1)/2`` (causal) or ``T(w) + (m-w)w`` (local window) steps
+and decodes ``t -> (q_block, k_block)`` with the closed-form inverse of
+the triangular enumeration (integer sqrt -- the m=2 case of the
+"order-m equation" map of related work [18]).
+
+Grid layout: ``(batch*heads, T)``; the triangular enumeration is
+row-major in q, so all k-steps of one q row are consecutive: the online
+softmax state lives in VMEM scratch and the output block is written once
+per row (standard flash revisiting pattern).  GQA folds the kv-head
+index inside the BlockSpec index_map.
+
+Forward only (training uses the custom-vjp jnp path in
+``repro.models.attention``; this kernel is the serving/TPU fast path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.domain import BandDomain, TriangularDomain
+
+NEG_INF = float(-1e30)  # avoid true -inf so exp() stays nan-free
+
+
+def _row_bounds(kind, qb, m_k, wb):
+    if kind == "causal":
+        return 0 * qb, qb
+    if kind == "local":
+        return jnp.maximum(qb - (wb - 1), 0), qb
+    return 0 * qb, qb * 0 + (m_k - 1)  # full
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 kind, window, scale, block_q, block_k, m_k, wb,
+                 grid_mode, domain):
+    if grid_mode == "compact":
+        t = pl.program_id(1)
+        kb, qb = domain.block_coords(t)
+        valid = None
+    else:
+        qb = pl.program_id(1)
+        kb = pl.program_id(2)
+        if kind == "causal":
+            valid = kb <= qb
+        elif kind == "local":
+            valid = (kb <= qb) & (kb >= qb - (wb - 1))
+        else:
+            valid = (kb == kb)
+    start, end = _row_bounds(kind, qb, m_k, wb)
+
+    def body():
+        @pl.when(kb == start)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        if kind in ("causal", "local"):
+            qpos = qb * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            mask = kpos <= qpos
+            if kind == "local":
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                 # (bq, 1)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+        @pl.when(kb == end)
+        def _():
+            l = l_ref[...]
+            l = jnp.where(l == 0, 1.0, l)
+            o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+    if valid is None:
+        body()
+    else:
+        pl.when(valid)(body)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kind", "window", "scale", "block_q", "block_k", "grid_mode",
+    "interpret"))
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, grid_mode: str = "compact",
+                    interpret: bool | None = None):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
+
+    kind:      "causal" | "local" (window tokens) | "full"
+    grid_mode: "compact" (paper's block-space map) | "bounding" (baseline)
+    causal/local require Sq == Sk (training/prefill self-attention).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError("sequence must be divisible by block size")
+    m_q, m_k = sq // block_q, sk // block_k
+
+    wb = 0
+    if kind == "local":
+        if block_q != block_k or window % block_k:
+            raise ValueError("local: need block_q == block_k | window")
+        wb = window // block_k + 1
+    if kind in ("causal", "local") and (sq != sk or block_q != block_k):
+        raise ValueError("causal/local require square block grids")
+
+    if kind == "causal":
+        domain = TriangularDomain(m_q)
+    elif kind == "local":
+        domain = BandDomain(m_q, wb)
+    else:
+        domain = None
+
+    if grid_mode == "compact" and domain is not None:
+        grid = (b * h, domain.num_blocks)
+
+        def q_idx(bh, t):
+            kb, qb = domain.block_coords(t)
+            return (bh // h, bh % h, qb, 0)
+
+        def kv_idx(bh, t):
+            kb, qb = domain.block_coords(t)
+            return (bh // h, (bh % h) // group, kb, 0)
+
+        def o_idx(bh, t):
+            kb, qb = domain.block_coords(t)
+            return (bh // h, bh % h, qb, 0)
+    else:
+        grid_mode = "bounding"
+        grid = (b * h, m_q, m_k)
+
+        def q_idx(bh, qb, kb):
+            return (bh // h, bh % h, qb, 0)
+
+        def kv_idx(bh, qb, kb):
+            return (bh // h, (bh % h) // group, kb, 0)
+
+        def o_idx(bh, qb, kb):
+            return (bh // h, bh % h, qb, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, kind=kind, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb,
+        grid_mode=grid_mode, domain=domain)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), q_idx),
+            pl.BlockSpec((1, 1, block_k, d), kv_idx),
+            pl.BlockSpec((1, 1, block_k, d), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), o_idx),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

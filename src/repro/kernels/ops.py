@@ -1,0 +1,12 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret=None`` (default) auto-selects: interpret on CPU (validation),
+compiled Mosaic on TPU.  All wrappers are thin -- the kernels themselves
+live in their own modules with their oracles in ``ref.py``.
+"""
+from .flash_attention import flash_attention
+from .sierpinski_ca import ca_step
+from .sierpinski_write import sierpinski_sum, sierpinski_write
+
+__all__ = ["flash_attention", "ca_step", "sierpinski_sum",
+           "sierpinski_write"]

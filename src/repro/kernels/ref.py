@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, real Mosaic lowering on TPU).  They are deliberately naive:
+full materialization, no tiling, no online softmax.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractal as F
+
+
+# ---------------------------------------------------------------------------
+# Paper SS IV microbenchmark: write a constant to every fractal cell
+# ---------------------------------------------------------------------------
+
+def sierpinski_write_ref(m: jnp.ndarray, value) -> jnp.ndarray:
+    """Write ``value`` at every gasket cell of the embedded n x n matrix."""
+    n = m.shape[0]
+    mask = jnp.asarray(F.membership_grid(n))
+    return jnp.where(mask, jnp.asarray(value, m.dtype), m)
+
+
+def sierpinski_sum_ref(m: jnp.ndarray) -> jnp.ndarray:
+    """f32 sum over the gasket cells of the embedded matrix."""
+    n = m.shape[0]
+    mask = jnp.asarray(F.membership_grid(n))
+    return jnp.sum(jnp.where(mask, m, 0).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Cellular automaton / diffusion on the embedded gasket
+# ---------------------------------------------------------------------------
+
+def _neighbor_shift(a: jnp.ndarray, dy: int, dx: int) -> jnp.ndarray:
+    """Value of the (dy, dx)-neighbor at each cell, 0 outside the matrix."""
+    n = a.shape[0]
+    out = jnp.roll(a, shift=(dy, dx), axis=(0, 1))
+    if dy == 1:
+        out = out.at[0, :].set(0)
+    if dy == -1:
+        out = out.at[n - 1, :].set(0)
+    if dx == 1:
+        out = out.at[:, 0].set(0)
+    if dx == -1:
+        out = out.at[:, n - 1].set(0)
+    return out
+
+
+def ca_step_ref(state: jnp.ndarray, rule: str = "parity",
+                alpha: float = 0.25) -> jnp.ndarray:
+    """One CA / diffusion step restricted to gasket cells.
+
+    parity:    s' = (s + N + S + W + E) mod 2           (Wolfram-style)
+    diffusion: s' = s + alpha * sum_{nbr in gasket}(nbr - s)   (graph heat eq)
+    Non-member cells stay 0 in both rules.
+    """
+    n = state.shape[0]
+    member = jnp.asarray(F.membership_grid(n))
+    nb = [_neighbor_shift(state, dy, dx)
+          for dy, dx in ((1, 0), (-1, 0), (0, 1), (0, -1))]
+    nsum = nb[0] + nb[1] + nb[2] + nb[3]
+    if rule == "parity":
+        new = jnp.mod(state + nsum, 2)
+    elif rule == "diffusion":
+        nbm = [_neighbor_shift(member.astype(state.dtype), dy, dx)
+               for dy, dx in ((1, 0), (-1, 0), (0, 1), (0, -1))]
+        deg = nbm[0] + nbm[1] + nbm[2] + nbm[3]
+        new = state + alpha * (nsum - deg * state)
+    else:
+        raise ValueError(rule)
+    return jnp.where(member, new, 0).astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (causal / local / full), GQA-aware
+# ---------------------------------------------------------------------------
+
+def attention_mask(kind: str, sq: int, sk: int, window: int = 0):
+    """(sq, sk) boolean mask. ``window`` is in tokens for kind="local".
+
+    For causal/local with sq != sk the queries are assumed to be the
+    *last* sq positions of the sk-long key sequence (decode convention).
+    """
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)
+    kpos = jnp.arange(sk)[None, :]
+    if kind == "full":
+        return jnp.ones((sq, sk), bool)
+    if kind == "causal":
+        return kpos <= qpos
+    if kind == "local":
+        return (kpos <= qpos) & (kpos > qpos - window)
+    raise ValueError(kind)
+
+
+def attention_ref(q, k, v, kind: str = "causal", window: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Naive softmax attention. q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D), Hkv | H."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    sk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    mask = attention_mask(kind, sq, sk, window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> 0
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,142 @@
+"""Cellular-automaton / diffusion step on the embedded gasket, as a
+block-space Pallas kernel (the application class the paper motivates:
+nearest-neighbour data-parallel simulation over the fractal).
+
+Halo exchange: the kernel receives five views of the state array (center
++ N/S/W/E neighbour tiles) via five BlockSpecs whose index_maps are the
+lambda-mapped block coordinate shifted by +-1 (clamped; contributions
+from clamped-out-of-range tiles are masked in-kernel).  The compact grid
+visits only member blocks; a *stale* buffer (zeros outside the fractal)
+is aliased to the output so unvisited blocks stay zero -- the classic
+double-buffer CA scheme, which is what keeps the lambda grid applicable
+to stencils, not just pointwise writes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fractal as F
+from .sierpinski_write import _member_mask
+
+
+def _ca_kernel(c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref, *,
+               rule, alpha, block, n, n_b, r_b, grid_mode):
+    if grid_mode == "compact":
+        i = pl.program_id(0)
+        bx, by = F.lambda_map_linear(i, r_b)
+        is_member_block = True
+    else:
+        by = pl.program_id(0)
+        bx = pl.program_id(1)
+        is_member_block = (bx & (n_b - 1 - by)) == 0
+
+    def body():
+        c = c_ref[...]
+        # halo rows/cols, zeroed when the neighbour tile is out of range
+        north = jnp.where(by > 0, n_ref[block - 1:block, :], 0)
+        south = jnp.where(by < n_b - 1, s_ref[0:1, :], 0)
+        west = jnp.where(bx > 0, w_ref[:, block - 1:block], 0)
+        east = jnp.where(bx < n_b - 1, e_ref[:, 0:1], 0)
+
+        up = jnp.concatenate([north, c[:-1, :]], axis=0)
+        down = jnp.concatenate([c[1:, :], south], axis=0)
+        left = jnp.concatenate([west, c[:, :-1]], axis=1)
+        right = jnp.concatenate([c[:, 1:], east], axis=1)
+        nsum = up + down + left + right
+
+        member = _member_mask(bx, by, block, n)
+        if rule == "parity":
+            new = jnp.mod(c + nsum, 2)
+        else:  # diffusion: graph Laplacian over member neighbours
+            iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+            ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+            gx = bx * block + ix
+            gy = by * block + iy
+
+            def nbr_member(dx, dy):
+                x, y = gx + dx, gy + dy
+                inside = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+                return (inside & ((x & (n - 1 - y)) == 0)).astype(c.dtype)
+
+            deg = (nbr_member(0, -1) + nbr_member(0, 1) +
+                   nbr_member(-1, 0) + nbr_member(1, 0))
+            new = c + jnp.asarray(alpha, c.dtype) * (nsum - deg * c)
+        o_ref[...] = jnp.where(member, new, 0).astype(o_ref.dtype)
+
+    if grid_mode == "compact":
+        body()
+    else:
+        pl.when(is_member_block)(body)
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "alpha", "block",
+                                             "grid_mode", "interpret"))
+def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
+            rule: str = "parity", alpha: float = 0.25, block: int = 128,
+            grid_mode: str = "compact",
+            interpret: bool | None = None) -> jnp.ndarray:
+    """One CA step.  ``stale_buf`` must be zero outside the fractal (e.g.
+    the state from two steps ago, or zeros); it is donated as the output
+    buffer so unvisited blocks remain valid."""
+    n = state.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block = min(block, n)
+    n_b = n // block
+    r_b = F.scale_level(n_b)
+
+    if grid_mode == "compact":
+        grid = (3 ** r_b,)
+
+        def blk(i):
+            lx, ly = F.lambda_map_linear(i, r_b)
+            return lx, ly
+    elif grid_mode == "bounding":
+        grid = (n_b, n_b)
+
+        def blk(i, j):
+            return j, i
+    else:
+        raise ValueError(grid_mode)
+
+    def _clamp(v, lo, hi):
+        return jnp.clip(v, lo, hi)
+
+    def idx_center(*a):
+        bx, by = blk(*a)
+        return (by, bx)
+
+    def idx_north(*a):
+        bx, by = blk(*a)
+        return (_clamp(by - 1, 0, n_b - 1), bx)
+
+    def idx_south(*a):
+        bx, by = blk(*a)
+        return (_clamp(by + 1, 0, n_b - 1), bx)
+
+    def idx_west(*a):
+        bx, by = blk(*a)
+        return (by, _clamp(bx - 1, 0, n_b - 1))
+
+    def idx_east(*a):
+        bx, by = blk(*a)
+        return (by, _clamp(bx + 1, 0, n_b - 1))
+
+    bs = functools.partial(pl.BlockSpec, (block, block))
+    kernel = functools.partial(_ca_kernel, rule=rule, alpha=alpha,
+                               block=block, n=n, n_b=n_b, r_b=r_b,
+                               grid_mode=grid_mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[bs(idx_center), bs(idx_north), bs(idx_south),
+                  bs(idx_west), bs(idx_east), bs(idx_center)],
+        out_specs=bs(idx_center),
+        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )(state, state, state, state, state, stale_buf)

@@ -1,0 +1,139 @@
+"""The paper's SS IV microbenchmark as Pallas TPU kernels.
+
+Two grid modes, exactly mirroring the paper's A/B:
+
+* ``compact``  -- the lambda(w) map: the grid has 3**r_b steps and
+  ``BlockSpec.index_map`` computes lambda on the scalar core
+  (the TPU-native realization of the paper's per-block map; the
+  O(log log n) warp reduction is replaced by pipelined scalar math).
+* ``bounding`` -- the bounding-box baseline: n_b x n_b grid steps, with
+  the run-time discard ``pl.when(block is member)``.
+
+Intra-block threads use the paper's *bounding sub-boxes* option: a VPU
+mask from ``broadcasted_iota`` evaluating the membership bit test
+``x & (n-1-y) == 0``.
+
+The written matrix is passed in and aliased to the output so that blocks
+never visited by the compact grid keep their previous contents (the
+embedded non-fractal region), matching the CUDA semantics of writing
+in-place into global memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fractal as F
+
+
+def _member_mask(bx, by, block: int, n: int):
+    """VPU membership mask for the (bx, by) tile (bounding sub-boxes)."""
+    iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    gx = bx * block + ix
+    gy = by * block + iy
+    return (gx & (n - 1 - gy)) == 0
+
+
+def _write_kernel_compact(m_ref, o_ref, *, value, block, n, r_b):
+    i = pl.program_id(0)
+    bx, by = F.lambda_map_linear(i, r_b)
+    mask = _member_mask(bx, by, block, n)
+    o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype), m_ref[...])
+
+
+def _write_kernel_bounding(m_ref, o_ref, *, value, block, n, n_b):
+    by = pl.program_id(0)
+    bx = pl.program_id(1)
+    # run-time discard: the whole block returns if outside the fractal
+    @pl.when((bx & (n_b - 1 - by)) == 0)
+    def _():
+        mask = _member_mask(bx, by, block, n)
+        o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype),
+                               m_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("value", "block", "grid_mode",
+                                    "interpret"))
+def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
+                     block: int = 128, grid_mode: str = "compact",
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Write ``value`` to every gasket cell of the embedded (n, n) matrix."""
+    n = m.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block = min(block, n)
+    n_b = n // block
+    r_b = F.scale_level(n_b)
+
+    if grid_mode == "compact":
+        kernel = functools.partial(_write_kernel_compact, value=value,
+                                   block=block, n=n, r_b=r_b)
+        grid = (3 ** r_b,)
+
+        def idx(i):
+            lx, ly = F.lambda_map_linear(i, r_b)
+            return (ly, lx)  # (row block, col block)
+    elif grid_mode == "bounding":
+        kernel = functools.partial(_write_kernel_bounding, value=value,
+                                   block=block, n=n, n_b=n_b)
+        grid = (n_b, n_b)
+
+        def idx(i, j):
+            return (i, j)
+    else:
+        raise ValueError(grid_mode)
+
+    spec = pl.BlockSpec((block, block), idx)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(m)
+
+
+def _sum_kernel_compact(m_ref, o_ref, *, block, n, r_b):
+    i = pl.program_id(0)
+    bx, by = F.lambda_map_linear(i, r_b)
+    mask = _member_mask(bx, by, block, n)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = jnp.where(mask, m_ref[...], 0).astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(tile)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """f32 sum over gasket cells, compact lambda grid, sequential accumulate."""
+    n = m.shape[0]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block = min(block, n)
+    n_b = n // block
+    r_b = F.scale_level(n_b)
+
+    def idx(i):
+        lx, ly = F.lambda_map_linear(i, r_b)
+        return (ly, lx)
+
+    out = pl.pallas_call(
+        functools.partial(_sum_kernel_compact, block=block, n=n, r_b=r_b),
+        grid=(3 ** r_b,),
+        in_specs=[pl.BlockSpec((block, block), idx)],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(m)
+    return out[0, 0]

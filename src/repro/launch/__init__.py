@@ -1,0 +1,4 @@
+# launch: mesh construction, dry-run, trainer, server.
+# NOTE: dryrun must be executed as a script/module so its XLA_FLAGS
+# device-count override happens before jax initializes.
+from . import mesh

@@ -1,0 +1,363 @@
+"""Post-SPMD HLO cost walker for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` visits each instruction ONCE -- a
+``lax.scan`` over 64 layers contributes a single body's FLOPs (verified
+empirically; see tests).  Since every production model here scans its
+layer stack, we walk the optimized HLO text ourselves:
+
+  * while loops multiply their body/condition costs by the trip count
+    (recovered from the loop-bound constant in the condition);
+  * fusions are charged inputs+outputs for memory (XLA's own model) and
+    their inner dot/elementwise FLOPs;
+  * collectives are tallied per type with BOTH raw operand bytes and an
+    estimated wire-traffic byte count (ring algorithms:
+    all-reduce 2(n-1)/n, all-gather/reduce-scatter (n-1)/n of the full
+    tensor, all-to-all (n-1)/n, collective-permute 1x).
+
+All quantities are PER DEVICE (the module is the SPMD-partitioned
+per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "negate", "abs", "sign",
+    "cosine", "sine", "logistic", "floor", "ceil", "round-nearest-afz",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "convert",
+    "erf",
+}
+
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "reshape",
+    "custom-call", "rng-bit-generator", "optimization-barrier",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # text after opcode
+
+
+_DEF_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\(.*?\)|[a-z0-9]+\[[^\]]*\]"
+    r"(?:\{[^}]*\})?))\s*([\w\-]+)\((.*)", re.S)
+
+
+def parse_module(txt: str):
+    """Returns (computations: name -> [Instr], entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for raw in txt.splitlines():
+        s = raw.strip()
+        if cur is None:
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                m = _DEF_RE.match(s)
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    if entry is None:
+        # fall back: computation containing no callers
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _trip_count(cond_instrs: List[Instr]) -> int:
+    """Loop bound heuristic: max integer constant in the condition."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    # long-form replica_groups={{0,1,2,3},...}
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _wire_multiplier(op: str, n: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter"):
+        # operand of all-gather is the shard; result n shards; wire moves
+        # (n-1) shards = (n-1) x operand bytes
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: float = 0.0          # raw operand bytes
+    coll_wire_bytes: float = 0.0     # algorithm-aware wire traffic
+    coll_by_type: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    bytes_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    flops_by_op: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes_accessed += mult * other.bytes_accessed
+        self.coll_bytes += mult * other.coll_bytes
+        self.coll_wire_bytes += mult * other.coll_wire_bytes
+        for k, v in other.coll_by_type.items():
+            self.coll_by_type[k] += mult * v
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += int(mult * v)
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] += mult * v
+        for k, v in other.flops_by_op.items():
+            self.flops_by_op[k] += mult * v
+
+    def charge(self, op: str, *, flops: float = 0.0, byts: float = 0.0):
+        self.flops += flops
+        self.bytes_accessed += byts
+        if flops:
+            self.flops_by_op[op] += flops
+        if byts:
+            self.bytes_by_op[op] += byts
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(ins.type_str)
+    # contraction size from lhs shape and lhs_contracting_dims
+    ops = re.findall(r"%([\w\.\-]+)", ins.rest.split(")")[0])
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+    k = 1
+    if ops and m and ops[0] in shapes:
+        dims_str = _SHAPE_RE.search(shapes[ops[0]])
+        if dims_str:
+            dims = [int(d) for d in dims_str.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze(txt: str) -> HloCost:
+    comps, entry = parse_module(txt)
+    shape_tables = {
+        cname: {i.name: i.type_str for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    memo: Dict[str, HloCost] = {}
+
+    def walk(cname: str, top_level: bool) -> HloCost:
+        key = cname + ("|t" if top_level else "|f")
+        if key in memo:
+            return memo[key]
+        cost = HloCost()
+        shapes = shape_tables.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if op.endswith("-done"):
+                continue
+            if base in _COLLECTIVES:
+                b = _shape_bytes(ins.type_str if base != "all-gather"
+                                 else _operand_types(ins, shapes))
+                n = _group_size(ins.rest)
+                cost.coll_bytes += b
+                w = b * _wire_multiplier(base, n)
+                cost.coll_wire_bytes += w
+                cost.coll_by_type[base] += w
+                cost.coll_count[base] += 1
+                cost.charge(base, byts=_shape_bytes(ins.type_str))
+                continue
+            if op == "while":
+                body, cond = _while_targets(ins.rest)
+                trips = _trip_count(comps.get(cond, []))
+                if body:
+                    cost.add(walk(body, top_level), trips)
+                if cond:
+                    cost.add(walk(cond, top_level), trips)
+                continue
+            if op == "conditional":
+                for branch in _cond_targets(ins.rest):
+                    cost.add(walk(branch, top_level), 1.0)
+                continue
+            if op == "fusion":
+                callee = _fusion_target(ins.rest)
+                reduces = has_dus = False
+                if callee:
+                    inner = walk(callee, False)
+                    cost.charge("fusion:inner", flops=inner.flops)
+                    callee_ops = {i.opcode for i in comps.get(callee, [])}
+                    reduces = bool(callee_ops & {"reduce", "reduce-window"})
+                    has_dus = "dynamic-update-slice" in callee_ops
+                if top_level:
+                    out_b = _shape_bytes(ins.type_str)
+                    op_bytes = [
+                        _shape_bytes(shapes.get(nm, ""))
+                        for nm in re.findall(r"%([\w\.\-]+)",
+                                             ins.rest.split("),")[0])]
+                    if has_dus and any(ob == out_b for ob in op_bytes):
+                        # in-place cache update threaded through a loop:
+                        # traffic = the written window (approximated by
+                        # the non-pass-through operands), NOT the buffer
+                        rest_b = sum(ob for ob in op_bytes if ob != out_b)
+                        cost.charge("fusion:dus", byts=2 * rest_b)
+                    else:
+                        ops_b = sum(ob if reduces else min(ob, out_b)
+                                    for ob in op_bytes)
+                        cost.charge("fusion", byts=out_b + ops_b)
+                continue
+            if op == "call":
+                callee = _fusion_target(ins.rest) or _call_target(ins.rest)
+                if callee:
+                    cost.add(walk(callee, top_level), 1.0)
+                continue
+            if op == "dot":
+                cost.charge("dot", flops=_dot_flops(ins, shapes))
+                if top_level:
+                    cost.charge("dot", byts=_shape_bytes(ins.type_str)
+                                + _operand_bytes(ins, shapes))
+                continue
+            if op in _ZERO_COST:
+                continue
+            if op in ("dynamic-update-slice",):
+                upd = _operand_type_n(ins, shapes, 1)
+                if top_level:
+                    cost.charge(op, byts=2 * _shape_bytes(upd))
+                continue
+            if op in ("dynamic-slice", "copy", "slice", "transpose",
+                      "concatenate", "pad", "gather", "scatter",
+                      "reverse", "sort", "cumsum"):
+                # data-movement ops: traffic ~ read + write of the RESULT
+                # (charging operands would bill e.g. a dynamic-slice of
+                # the full stacked layer params on every loop iteration)
+                if top_level:
+                    cost.charge(op, byts=2 * _shape_bytes(ins.type_str))
+                continue
+            if op == "broadcast":
+                if top_level:
+                    cost.charge(op, byts=_shape_bytes(ins.type_str))
+                continue
+            if op in ("reduce", "reduce-window"):
+                cost.charge(op, flops=_operand_elems(ins, shapes))
+                if top_level:
+                    cost.charge(op, byts=_shape_bytes(ins.type_str)
+                                + _operand_bytes(ins, shapes))
+                continue
+            if op in _ELEMENTWISE:
+                cost.charge(op, flops=_shape_elems(ins.type_str))
+                if top_level:
+                    cost.charge(op, byts=_shape_bytes(ins.type_str)
+                                + _operand_bytes(ins, shapes))
+                continue
+            # unknown op: charge memory when top-level, no flops
+            if top_level:
+                cost.charge("other:" + op,
+                            byts=_shape_bytes(ins.type_str))
+        memo[key] = cost
+        return cost
+
+    def _operand_types(ins: Instr, shapes) -> str:
+        names = re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0])
+        return ",".join(shapes.get(n, "") for n in names)
+
+    def _operand_bytes(ins: Instr, shapes) -> int:
+        return _shape_bytes(_operand_types(ins, shapes))
+
+    def _operand_elems(ins: Instr, shapes) -> int:
+        return _shape_elems(_operand_types(ins, shapes))
+
+    def _operand_type_n(ins: Instr, shapes, n: int) -> str:
+        names = re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0])
+        return shapes.get(names[n], "") if len(names) > n else ""
+
+    return walk(entry, True)
+
+
+def _while_targets(rest: str) -> Tuple[Optional[str], Optional[str]]:
+    mb = re.search(r"body=%?([\w\.\-]+)", rest)
+    mc = re.search(r"condition=%?([\w\.\-]+)", rest)
+    return (mb.group(1) if mb else None, mc.group(1) if mc else None)
+
+
+def _fusion_target(rest: str) -> Optional[str]:
+    m = re.search(r"calls=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _call_target(rest: str) -> Optional[str]:
+    m = re.search(r"to_apply=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None

@@ -1,0 +1,4 @@
+from . import attention, layers, mla, model, moe, ssm
+from .config import ModelConfig
+from .model import (abstract_init, decode_step, forward, init, init_cache,
+                    logits_fn, loss_fn, prefill)

@@ -1,0 +1,320 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) selective scan and
+Mamba-2 / SSD (zamba2), both in chunked forms that keep the TPU MXU busy
+(SSD intra-chunk is pure matmul) and bound memory to O(B * chunk * d * N).
+
+Each scan has a naive sequential reference (`*_scan_ref`) used by the
+tests; decode steps carry (ssm_state, conv_state) caches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm, split
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B,S,C); w: (C,K); b: (C,).  Causal: output t sees x[t-K+1..t]."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # K shifted views contracted against the per-channel taps
+    views = jnp.stack([xp[:, i:i + x.shape[1], :] for i in range(k)], -1)
+    out = jnp.einsum("bsck,ck->bsc", views, w)
+    return out + b[None, None, :]
+
+
+def conv_step(conv_state, x_new, w, b):
+    """Decode: conv_state (B, K-1, C), x_new (B, 1, C) -> (y, new_state)."""
+    k = w.shape[1]
+    window = jnp.concatenate([conv_state, x_new], axis=1)      # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window, w) + b[None, :]
+    return y[:, None, :], window[:, -(k - 1):, :] if k > 1 else window[:, :0]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x, dt, A, B, C):
+    """Sequential oracle.  x,dt: (b,s,di); A: (di,n); B,C: (b,s,n).
+    Returns y (b,s,di) in f32."""
+    x, dt, B, C = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (b,di) (b,di) (b,n) (b,n)
+        da = jnp.exp(dtt[..., None] * A[None])            # (b,di,n)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.sum(h * ct[:, None, :], -1)               # (b,di)
+        return h, y
+
+    b, s, di = x.shape
+    h0 = jnp.zeros((b, di, A.shape[1]), jnp.float32)
+    xs = (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2)
+
+
+def selective_scan(x, dt, A, B, C, *, chunk=128, h0=None, return_state=False):
+    """Chunked selective scan: within-chunk associative scan, across-chunk
+    lax.scan.  Shapes as in selective_scan_ref."""
+    b, s, di = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("seq len must be divisible by chunk")
+    nc = s // chunk
+    x, dt, B, C = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+
+    # per-step decay a_t = exp(dt_t * A) and input b_t = dt_t * B_t * x_t
+    xs = x.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+    dts = dt.reshape(b, nc, chunk, di).transpose(1, 0, 2, 3)
+    Bs = B.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cs = C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                       # (b,L,di) ... (b,L,n)
+        a = jnp.exp(dtc[..., None] * A[None, None])           # (b,L,di,n)
+        u = (dtc * xc)[..., None] * bc[:, :, None, :]         # (b,L,di,n)
+
+        def combine(e1, e2):
+            a1, u1 = e1
+            a2, u2 = e2
+            return a1 * a2, a2 * u1 + u2
+
+        acc_a, acc_u = jax.lax.associative_scan(combine, (a, u), axis=1)
+        hs = acc_a * h[:, None] + acc_u                       # (b,L,di,n)
+        y = jnp.sum(hs * cc[:, :, None, :], -1)               # (b,L,di)
+        return hs[:, -1], y
+
+    h = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+    h, ys = jax.lax.scan(chunk_step, h, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return (y, h) if return_state else y
+
+
+def mamba1_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.jparam_dtype()
+    d, di, n, dtr, k = (cfg.d_model, cfg.d_inner, cfg.d_state,
+                        cfg.dt_rank_, cfg.conv_kernel)
+    ks = split(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": jax.random.normal(ks[1], (di, k), dtype) * 0.1,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((di,), 0.01, jnp.float32))).astype(dtype),
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _mamba1_inner(p, x1, z, cfg):
+    """Common post-conv computation. x1: (B,S,di) already conv+silu'd."""
+    n, dtr = cfg.d_state, cfg.dt_rank_
+    dbl = x1 @ p["x_proj"].astype(x1.dtype)
+    dt, Bc, Cc = jnp.split(dbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(x1.dtype)
+                         + p["dt_bias"].astype(x1.dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    return dt, A, Bc, Cc
+
+
+def mamba1_block(p, x, cfg, *, return_cache=False):
+    """x: (B,S,D) -> (B,S,D).  Train/prefill (no incoming state)."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    if return_cache:
+        k = cfg.conv_kernel
+        conv_cache = x1[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            x1, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    x1 = jax.nn.silu(causal_conv1d(x1, p["conv_w"].astype(x.dtype),
+                                   p["conv_b"].astype(x.dtype)))
+    dt, A, Bc, Cc = _mamba1_inner(p, x1, z, cfg)
+    y, h = selective_scan(x1, dt, A, Bc, Cc, chunk=cfg.ssd_chunk,
+                          return_state=True)
+    y = y + x1.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_cache:
+        return out, (h, conv_cache.astype(x.dtype))
+    return out
+
+
+def mamba1_decode(p, x, cfg, cache):
+    """x: (B,1,D); cache: (h (B,di,n) f32, conv (B,K-1,di))."""
+    h, conv_cache = cache
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1c, conv_cache = conv_step(conv_cache, x1, p["conv_w"].astype(x.dtype),
+                                p["conv_b"].astype(x.dtype))
+    x1c = jax.nn.silu(x1c)
+    dt, A, Bc, Cc = _mamba1_inner(p, x1c, z, cfg)
+    xt, dtt = x1c[:, 0].astype(jnp.float32), dt[:, 0].astype(jnp.float32)
+    bt, ct = Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32)
+    da = jnp.exp(dtt[..., None] * A[None])
+    h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+    y = jnp.sum(h * ct[:, None, :], -1) + xt * p["D"].astype(jnp.float32)
+    y = y[:, None, :].astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype), (h, conv_cache)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential oracle.  x: (b,s,nh,P); dt: (b,s,nh); A: (nh,);
+    B,C: (b,s,n).  Returns y (b,s,nh,P) f32."""
+    x, dt, B, C = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp      # (b,nh,P) (b,nh) (b,n) (b,n)
+        da = jnp.exp(dtt * A[None])                      # (b,nh)
+        upd = jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+        h = da[..., None, None] * h + upd
+        y = jnp.einsum("bhnp,bn->bhp", h, ct)
+        return h, y
+
+    b, s, nh, pdim = x.shape
+    n = B.shape[-1]
+    h0 = jnp.zeros((b, nh, n, pdim), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk=128, h0=None, return_state=False):
+    """Chunked SSD (Mamba-2): intra-chunk is an (L,L) masked-decay matmul
+    (MXU-friendly), inter-chunk state is carried by lax.scan."""
+    b, s, nh, pdim = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError("seq len must be divisible by chunk")
+    nc = s // chunk
+    x, dt, B, C = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+
+    xs = x.reshape(b, nc, chunk, nh, pdim).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(b, nc, chunk, nh).transpose(1, 0, 2, 3)
+    Bs = B.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cs = C.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp
+        da = dtc * A[None, None]                    # (b,L,nh)
+        cum = jnp.cumsum(da, axis=1)                # (b,L,nh)
+        # intra-chunk: scores_ij = (C_i . B_j) * exp(cum_i - cum_j) * dt_j
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)     # (b,L,L)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b,i,j,nh)
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        w = cb[..., None] * decay * dtc[:, None, :, :]            # (b,i,j,nh)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc)
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bin,bhnp->bihp", cc, h) * \
+            jnp.exp(cum)[..., None]
+        # state update
+        edge = jnp.exp(cum[:, -1:, :] - cum)        # (b,L,nh)
+        upd = jnp.einsum("bjn,bjhp,bjh->bhnp", bc, xc, edge * dtc)
+        h_new = h * jnp.exp(cum[:, -1])[..., None, None] + upd
+        return h_new, y_intra + y_inter
+
+    h = h0 if h0 is not None else jnp.zeros((b, nh, n, pdim), jnp.float32)
+    h, ys = jax.lax.scan(chunk_step, h, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, pdim)
+    return (y, h) if return_state else y
+
+
+def mamba2_init(key, cfg, dtype=None):
+    dtype = dtype or cfg.jparam_dtype()
+    d, di, n, nh, k = (cfg.d_model, cfg.d_inner, cfg.d_state,
+                       cfg.ssd_heads, cfg.conv_kernel)
+    ks = split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + nh, dtype),
+        "conv_w": jax.random.normal(ks[1], (di + 2 * n, k), dtype) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((nh,), 0.01, jnp.float32))).astype(dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _mamba2_split(p, x, cfg):
+    di, n, nh = cfg.d_inner, cfg.d_state, cfg.ssd_heads
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    return jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)  # z, xBC, dt
+
+
+def _gated_norm(p, y, z, eps):
+    y = y * jax.nn.silu(z)
+    return rmsnorm({"scale": p["norm_scale"]}, y, eps)
+
+
+def mamba2_block(p, x, cfg, *, return_cache=False):
+    b, s, _ = x.shape
+    di, n, nh, pdim = cfg.d_inner, cfg.d_state, cfg.ssd_heads, cfg.ssd_head_dim
+    z, xBC, dt = _mamba2_split(p, x, cfg)
+    if return_cache:
+        k = cfg.conv_kernel
+        conv_cache = xBC[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+            xBC, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype)))
+    x1, Bc, Cc = jnp.split(xBC, [di, di + n], axis=-1)
+    xh = x1.reshape(b, s, nh, pdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_scan(xh, dt, A, Bc, Cc, chunk=cfg.ssd_chunk,
+                    return_state=True)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_cache:
+        return out, (h, conv_cache.astype(x.dtype))
+    return out
+
+
+def mamba2_decode(p, x, cfg, cache):
+    b = x.shape[0]
+    di, n, nh, pdim = cfg.d_inner, cfg.d_state, cfg.ssd_heads, cfg.ssd_head_dim
+    h, conv_cache = cache
+    z, xBC, dt = _mamba2_split(p, x, cfg)
+    xBCc, conv_cache = conv_step(conv_cache, xBC,
+                                 p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype))
+    xBCc = jax.nn.silu(xBCc)
+    x1, Bc, Cc = jnp.split(xBCc, [di, di + n], axis=-1)
+    xt = x1[:, 0].reshape(b, nh, pdim).astype(jnp.float32)
+    dtt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    bt, ct = Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32)
+    da = jnp.exp(dtt * A[None])
+    h = da[..., None, None] * h + jnp.einsum("bn,bhp,bh->bhnp", bt, xt, dtt)
+    y = jnp.einsum("bhnp,bn->bhp", h, ct) + xt * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), (h, conv_cache)

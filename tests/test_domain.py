@@ -1,0 +1,103 @@
+"""Tests for the block-space domain abstraction (repro.core.domain)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fractal as F
+from repro.core.domain import (BandDomain, BoundingBoxDomain,
+                               GeneralizedFractalDomain, SierpinskiDomain,
+                               TriangularDomain, make_attention_domain)
+
+
+@pytest.mark.parametrize("n_b", [1, 2, 4, 8, 16, 64])
+def test_sierpinski_domain_enumeration(n_b):
+    d = SierpinskiDomain(n_b)
+    c = d.coords_host()
+    assert c.shape == (d.num_blocks, 2)
+    assert len({tuple(r) for r in c}) == d.num_blocks
+    for x, y in c:
+        assert F.is_member(int(x), int(y), n_b)
+        assert bool(d.contains(int(x), int(y)))
+
+
+@pytest.mark.parametrize("n_b", [4, 16, 64, 256])
+def test_sierpinski_space_efficiency_matches_theorem(n_b):
+    # Theorem 2: compact grid uses n**H of the n**2 bounding-box blocks.
+    d = SierpinskiDomain(n_b)
+    assert d.num_blocks == n_b ** 2 * d.space_efficiency()
+    assert d.num_blocks == F.gasket_volume(n_b)
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 5, 8, 17, 64, 257])
+def test_triangular_enumeration(m):
+    t = TriangularDomain(m)
+    c = t.coords_host()
+    want = {(k, q) for q in range(m) for k in range(q + 1)}
+    assert {tuple(r) for r in c} == want
+    assert t.num_blocks == len(want)
+
+
+@given(st.integers(1, 2000), st.data())
+@settings(max_examples=200, deadline=None)
+def test_property_triangular_decode(m, data):
+    t = TriangularDomain(m)
+    i = data.draw(st.integers(0, t.num_blocks - 1))
+    k, q = t.block_coords(i)
+    k, q = int(k), int(q)
+    assert 0 <= k <= q < m
+    assert q * (q + 1) // 2 + k == i  # exact inverse of the enumeration
+
+
+@pytest.mark.parametrize("m,w", [(8, 3), (8, 8), (5, 1), (16, 4), (7, 9),
+                                 (64, 8), (1, 1)])
+def test_band_enumeration(m, w):
+    b = BandDomain(m, w)
+    c = b.coords_host()
+    weff = min(w, m)
+    want = {(k, q) for q in range(m)
+            for k in range(max(0, q - weff + 1), q + 1)}
+    assert {tuple(r) for r in c} == want
+    assert b.num_blocks == len(want)
+    for k, q in want:
+        assert bool(b.contains(k, q))
+
+
+def test_bounding_box_domain():
+    bb = BoundingBoxDomain(4, 3)
+    c = bb.coords_host()
+    assert {tuple(r) for r in c} == {(x, y) for y in range(3) for x in range(4)}
+    assert bb.space_efficiency() == 1.0
+
+
+def test_bounding_box_with_membership():
+    n = 8
+    bb = BoundingBoxDomain(n, n, member=lambda x, y: F.is_member(x, y, n))
+    kept = [(x, y) for x, y in bb.coords_host() if bool(bb.contains(int(x), int(y)))]
+    assert len(kept) == F.gasket_volume(n)
+
+
+def test_generalized_fractal_domain():
+    d = GeneralizedFractalDomain(F.VICSEK, 9)
+    c = d.coords_host()
+    grid = F.VICSEK.membership_grid(9)
+    assert len(c) == 25
+    assert all(grid[y, x] for x, y in c)
+
+
+def test_attention_domain_factory():
+    assert isinstance(make_attention_domain("causal", 8, 8), TriangularDomain)
+    assert isinstance(make_attention_domain("local", 8, 8, 2), BandDomain)
+    assert isinstance(make_attention_domain("full", 4, 8), BoundingBoxDomain)
+    with pytest.raises(ValueError):
+        make_attention_domain("causal", 4, 8)
+    with pytest.raises(ValueError):
+        make_attention_domain("nope", 4, 4)
+
+
+def test_space_efficiency_ordering():
+    # narrow band << fractal << triangular << bounding box, for big m
+    s = SierpinskiDomain(256).space_efficiency()
+    t = TriangularDomain(256).space_efficiency()
+    b = BandDomain(256, 16).space_efficiency()
+    assert b < s < t < 1.0

@@ -1,0 +1,116 @@
+"""Unit + property tests for the paper's lambda(w) map (repro.core.fractal)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fractal as F
+
+
+@pytest.mark.parametrize("r", range(0, 10))
+def test_volume_is_hausdorff_power(r):
+    # Lemma 1: V = 3**r = n**H
+    n = 2 ** r
+    assert F.gasket_volume(n) == 3 ** r
+    if r:
+        assert math.isclose(3 ** r, n ** F.HAUSDORFF, rel_tol=1e-9)
+
+
+@pytest.mark.parametrize("r", range(0, 9))
+def test_lambda_is_bijection_onto_membership(r):
+    # Lemma 2 + Theorem 1: the orthotope maps 1:1 onto the embedded gasket.
+    n = 2 ** r
+    ox, oy = F.orthotope_shape(r)
+    assert ox * oy == 3 ** r
+    wy, wx = np.mgrid[0:oy, 0:ox]
+    lx, ly = F.lambda_map(wx, wy, r)
+    coords = set(zip(lx.ravel().tolist(), ly.ravel().tolist()))
+    assert len(coords) == 3 ** r  # injective
+    member = {(x, y) for y, x in zip(*np.nonzero(F.membership_grid(n)))}
+    assert coords == member  # surjective onto the fractal
+
+
+@pytest.mark.parametrize("r", range(0, 9))
+def test_linear_map_matches_2d_map_as_set(r):
+    n = 2 ** r
+    i = np.arange(3 ** r)
+    lx, ly = F.lambda_map_linear(i, r)
+    member = {(x, y) for y, x in zip(*np.nonzero(F.membership_grid(n)))}
+    assert set(zip(lx.tolist(), ly.tolist())) == member
+
+
+@pytest.mark.parametrize("r", range(1, 9))
+def test_lambda_inverse_roundtrip(r):
+    ox, oy = F.orthotope_shape(r)
+    wy, wx = np.mgrid[0:oy, 0:ox]
+    lx, ly = F.lambda_map(wx, wy, r)
+    iwx, iwy = F.lambda_inverse(lx, ly, r)
+    assert np.array_equal(iwx, wx)
+    assert np.array_equal(iwy, wy)
+
+
+@given(st.integers(0, 12), st.integers(0, 3 ** 12 - 1))
+@settings(max_examples=200, deadline=None)
+def test_property_linear_map_hits_members_only(r, i):
+    i = i % (3 ** r)
+    lx, ly = F.lambda_map_linear(int(i), r)
+    n = 2 ** r
+    assert 0 <= lx < n and 0 <= ly < n
+    assert F.is_member(int(lx), int(ly), n)
+
+
+@given(st.integers(1, 10), st.data())
+@settings(max_examples=100, deadline=None)
+def test_property_beta_recovers_region(r, data):
+    # beta_mu of a mapped coordinate's preimage equals the base-3 digit.
+    i = data.draw(st.integers(0, 3 ** r - 1))
+    digits = [(i // 3 ** (mu - 1)) % 3 for mu in range(1, r + 1)]
+    # reconstruct (w_x, w_y) from the alternating digit convention
+    wx = sum(d * 3 ** k for k, d in enumerate(digits[1::2]))
+    wy = sum(d * 3 ** k for k, d in enumerate(digits[0::2]))
+    for mu in range(1, r + 1):
+        assert int(F.beta_mu(wx, wy, mu)) == digits[mu - 1]
+    lx, ly = F.lambda_map(wx, wy, r)
+    lx2, ly2 = F.lambda_map_linear(i, r)
+    assert (int(lx), int(ly)) == (int(lx2), int(ly2))
+
+
+@pytest.mark.parametrize("spec", [F.SIERPINSKI, F.CARPET, F.VICSEK])
+@pytest.mark.parametrize("r", range(0, 4))
+def test_generalized_fractal_bijection(spec, r):
+    n = spec.m ** r
+    i = np.arange(spec.k ** r)
+    lx, ly = spec.lambda_map_linear(i, r)
+    coords = set(zip(lx.tolist(), ly.tolist()))
+    member = {(x, y) for y, x in zip(*np.nonzero(spec.membership_grid(n)))}
+    assert coords == member
+    assert len(coords) == spec.k ** r
+
+
+def test_gasket_bit_test_equals_recursive_construction():
+    for r in range(0, 9):
+        n = 2 ** r
+        assert np.array_equal(F.membership_grid(n),
+                              F.SIERPINSKI.membership_grid(n))
+
+
+@pytest.mark.parametrize("r", [3, 5, 6])
+def test_pack_unpack_roundtrip(r):
+    import jax.numpy as jnp
+    n = 2 ** r
+    g = jnp.arange(n * n, dtype=jnp.int32).reshape(n, n)
+    p = F.pack_to_orthotope(g, r)
+    ox, oy = F.orthotope_shape(r)
+    assert p.shape == (oy, ox)
+    u = np.asarray(F.unpack_from_orthotope(p, r, n, fill=-1))
+    m = F.membership_grid(n)
+    assert np.array_equal(u[m], np.asarray(g)[m])
+    assert (u[~m] == -1).all()
+
+
+def test_hausdorff_constant():
+    assert abs(F.HAUSDORFF - 1.5849625007) < 1e-9
+    assert abs(F.CARPET.hausdorff - math.log(8, 3)) < 1e-12
+    assert abs(F.VICSEK.hausdorff - math.log(5, 3)) < 1e-12

@@ -1,0 +1,128 @@
+"""SSM scans: chunked vs sequential oracles; block/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import ssm
+from repro.models.config import ModelConfig
+
+RNG = np.random.default_rng(11)
+
+
+def _scan_inputs(b, s, di, n):
+    return (jnp.asarray(RNG.normal(size=(b, s, di)), jnp.float32),
+            jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, di)), jnp.float32),
+            -jnp.asarray(RNG.uniform(0.5, 2, size=(di, n)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32),
+            jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_selective_scan_matches_sequential(chunk):
+    x, dt, A, B, C = _scan_inputs(2, 64, 16, 8)
+    got = ssm.selective_scan(x, dt, A, B, C, chunk=chunk)
+    want = ssm.selective_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.sampled_from([4, 8, 16]), st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_property_selective_scan_chunking_invariance(b, s, chunk):
+    x, dt, A, B, C = _scan_inputs(b, 32, 8, 4)
+    a = ssm.selective_scan(x, dt, A, B, C, chunk=chunk)
+    bb = ssm.selective_scan(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(a, bb, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_ssd_matches_sequential(chunk):
+    b, s, nh, p, n = 2, 64, 4, 8, 16
+    x = jnp.asarray(RNG.normal(size=(b, s, nh, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.5, size=(b, s, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2, size=(nh,)), jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+    got = ssm.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ssm.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def _cfg1():
+    return ModelConfig(d_model=32, d_state=8, expand=2, conv_kernel=4,
+                       ssd_chunk=8, dtype="float32", param_dtype="float32")
+
+
+def _cfg2():
+    return ModelConfig(d_model=32, d_state=16, expand=2, conv_kernel=4,
+                       ssd_head_dim=16, ssd_chunk=8, dtype="float32",
+                       param_dtype="float32")
+
+
+def test_mamba1_decode_consistency():
+    cfg = _cfg1()
+    p = ssm.mamba1_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 32)), jnp.float32)
+    y_all, cache = ssm.mamba1_block(p, x, cfg, return_cache=True)
+    c = (jnp.zeros((2, cfg.d_inner, cfg.d_state), jnp.float32),
+         jnp.zeros((2, cfg.conv_kernel - 1, cfg.d_inner), jnp.float32))
+    ys = []
+    for t in range(16):
+        y, c = ssm.mamba1_decode(p, x[:, t:t + 1], cfg, c)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_all,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(c[0], cache[0], rtol=1e-4, atol=1e-5)
+
+
+def test_mamba2_decode_consistency():
+    cfg = _cfg2()
+    p = ssm.mamba2_init(jax.random.PRNGKey(1), cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 32)), jnp.float32)
+    y_all, _ = ssm.mamba2_block(p, x, cfg, return_cache=True)
+    c = (jnp.zeros((2, cfg.ssd_heads, cfg.d_state, cfg.ssd_head_dim),
+                   jnp.float32),
+         jnp.zeros((2, cfg.conv_kernel - 1, cfg.d_inner + 2 * cfg.d_state),
+                   jnp.float32))
+    ys = []
+    for t in range(16):
+        y, c = ssm.mamba2_decode(p, x[:, t:t + 1], cfg, c)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.concatenate(ys, 1), y_all,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grads_finite():
+    x = jnp.asarray(RNG.normal(size=(2, 16, 32)), jnp.float32)
+    for cfg, init, blk in ((_cfg1(), ssm.mamba1_init, ssm.mamba1_block),
+                           (_cfg2(), ssm.mamba2_init, ssm.mamba2_block)):
+        p = init(jax.random.PRNGKey(0), cfg)
+        g = jax.grad(lambda p: jnp.sum(blk(p, x, cfg) ** 2))(p)
+        assert all(np.isfinite(np.asarray(v)).all()
+                   for v in jax.tree.leaves(g))
+
+
+def test_causal_conv_is_causal():
+    x = jnp.asarray(RNG.normal(size=(1, 16, 4)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(4, 3)), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    y1 = ssm.causal_conv1d(x, w, b)
+    x2 = x.at[:, 10:, :].set(0)
+    y2 = ssm.causal_conv1d(x2, w, b)
+    np.testing.assert_allclose(y1[:, :10], y2[:, :10], rtol=1e-6)
+
+
+def test_conv_step_matches_full():
+    x = jnp.asarray(RNG.normal(size=(2, 8, 4)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(4, 3)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(4,)), jnp.float32)
+    full = ssm.causal_conv1d(x, w, b)
+    state = jnp.zeros((2, 2, 4), jnp.float32)
+    outs = []
+    for t in range(8):
+        y, state = ssm.conv_step(state, x[:, t:t + 1], w, b)
+        outs.append(y)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=1e-5, atol=1e-6)
