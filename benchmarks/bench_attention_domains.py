@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import LOWERINGS
+from repro.kernels import ops
 from repro.launch.hlo_analysis import analyze
 from repro.models.attention import flash_attention_xla
 from .common import row, time_fn
@@ -27,7 +29,30 @@ def hlo_flops(schedule, b, h, s, d, chunk):
     return analyze(compiled.as_text()).flops
 
 
+def run_kernel_lowerings(iters: int = 5):
+    """GridPlan lowering A/B on the Pallas flash kernel, per attention
+    block domain (triangular / band / bounding-box) and block size."""
+    print("# Pallas flash kernel: GridPlan lowering A/B per domain")
+    rng = np.random.default_rng(0)
+    for kind, kw, s, bq in (("causal", {}, 256, 64),
+                            ("causal", {}, 256, 128),
+                            ("local", {"window": 128}, 256, 64),
+                            ("full", {}, 256, 64)):
+        q = jnp.asarray(rng.normal(size=(1, 2, s, 32)), jnp.float32)
+        t_closed = None
+        for low in LOWERINGS:
+            fn = functools.partial(ops.flash_attention, kind=kind,
+                                   block_q=bq, block_k=bq,
+                                   grid_mode=low, **kw)
+            t = time_fn(fn, q, q, q, warmup=2, iters=iters)
+            if t_closed is None:
+                t_closed = t
+            row(f"gridplan_flash/{kind}/s={s}/bq={bq}/{low}", t,
+                f"speedup_vs_closed_form={t_closed / t:.2f}")
+
+
 def run():
+    run_kernel_lowerings()
     print("# causal flash attention: dense (BB) vs triangular (compact)")
     b, h, d = 1, 4, 64
     for s, chunk in ((2048, 256), (4096, 512), (8192, 1024)):

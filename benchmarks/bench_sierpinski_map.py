@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fractal as F
+from repro.core.plan import LOWERINGS
+from repro.kernels import ops
 from .common import row, time_fn
 
 
@@ -61,7 +63,37 @@ def lam_write_packed(mp, r, block):
     return jnp.where(sel, jnp.float32(7.0), mp)
 
 
+def run_lowering_ab(iters: int = 5):
+    """GridPlan lowering A/B on the Pallas write kernel (interpret on
+    CPU): the paper-family lambda-vs-LUT-vs-bounding-box comparison,
+    per domain and block size.  On TPU the same sweep times the
+    compiled Mosaic kernels."""
+    print("# GridPlan lowering A/B (Pallas write kernel):")
+    print("#   closed_form = inline lambda decode in index_maps")
+    print("#   prefetch_lut = scalar-prefetch coordinate table")
+    print("#   bounding     = full grid + run-time discard")
+    cases = (
+        ("sierpinski-gasket", 64, (8, 16, 32)),
+        ("sierpinski-carpet", 27, (3, 9)),
+        ("vicsek-cross", 27, (3, 9)),
+    )
+    for fractal, n, blocks in cases:
+        m = jnp.zeros((n, n), jnp.float32)
+        for rho in blocks:
+            t_closed = None
+            for low in LOWERINGS:
+                fn = functools.partial(ops.sierpinski_write, value=7.0,
+                                       block=rho, grid_mode=low,
+                                       fractal=fractal)
+                t = time_fn(fn, m, warmup=2, iters=iters)
+                if t_closed is None:
+                    t_closed = t
+                row(f"gridplan_write/{fractal}/n={n}/rho={rho}/{low}", t,
+                    f"speedup_vs_closed_form={t_closed / t:.2f}")
+
+
 def run(max_r: int = 11):
+    run_lowering_ab()
     print("# paper Fig.8 analogue: lambda vs bounding-box write, CPU/XLA")
     print("# lam_scatter = embedded-layout scatter (CPU-hostile, kept as")
     print("# the documented negative result); lam_packed = compact layout")

@@ -1,0 +1,10 @@
+"""Block-space TPU mapping for embedded fractals (Navarro et al. 2017)."""
+import jax
+
+# Sharded and single-device runs must draw identical jax.random values
+# from the same seed: with non-partitionable threefry (the default
+# until jax 0.4.36), values depend on the output sharding, so a
+# TP-sharded param init silently diverges from the single-device init.
+# Set once at package import so every entry point (train, serve,
+# benchmarks, tests) sees the same RNG stream.
+jax.config.update("jax_threefry_partitionable", True)

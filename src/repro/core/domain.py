@@ -30,6 +30,9 @@ class BlockDomain:
     """Interface; block coords are (bx, by) with y the row (downwards)."""
 
     name: str = "abstract"
+    #: True when every bounding-box block is a member (no run-time
+    #: discard needed even under the "bounding" lowering).
+    always_member: bool = False
 
     @property
     def num_blocks(self) -> int:
@@ -43,11 +46,25 @@ class BlockDomain:
         """Membership test in the embedded block space (traceable)."""
         raise NotImplementedError
 
+    def cell_member(self, gx, gy, n: int):
+        """Cell-level membership of the embedded n x n grid (traceable);
+        only meaningful for domains with intra-block structure (fractals).
+        Default: every cell of a member block is live."""
+        return (gx == gx)  # all true, shape-following
+
     def coords_host(self) -> np.ndarray:
-        """(num_blocks, 2) int32 enumeration on host (oracle + lookup table)."""
-        i = np.arange(self.num_blocks, dtype=np.int64)
-        bx, by = self.block_coords(i)
-        return np.stack([np.asarray(bx), np.asarray(by)], -1).astype(np.int32)
+        """(num_blocks, 2) int32 enumeration on host (oracle + the
+        scalar-prefetch lookup table).  Memoized per instance -- the
+        table is re-read per GridPlan launch."""
+        cached = getattr(self, "_coords_host", None)
+        if cached is None:
+            i = np.arange(self.num_blocks, dtype=np.int64)
+            bx, by = self.block_coords(i)
+            cached = np.stack(
+                [np.asarray(bx), np.asarray(by)], -1).astype(np.int32)
+            cached.setflags(write=False)
+            self._coords_host = cached
+        return cached
 
     def space_efficiency(self) -> float:
         """Fraction of bounding-box blocks that are real work (Theorem 2)."""
@@ -68,6 +85,7 @@ class BoundingBoxDomain(BlockDomain):
     def __init__(self, nbx: int, nby: int, member=None):
         self.nbx, self.nby = nbx, nby
         self._member = member
+        self.always_member = member is None
 
     @property
     def num_blocks(self) -> int:
@@ -109,6 +127,9 @@ class SierpinskiDomain(BlockDomain):
     def contains(self, bx, by):
         return F.is_member(bx, by, self.n_b)
 
+    def cell_member(self, gx, gy, n: int):
+        return F.is_member(gx, gy, n)
+
 
 class GeneralizedFractalDomain(BlockDomain):
     """Paper SS V future-work question 1: any F^{k,s} digit-unrolled fractal."""
@@ -133,15 +154,31 @@ class GeneralizedFractalDomain(BlockDomain):
         return self.spec.lambda_map_linear(i, self.r_b)
 
     def contains(self, bx, by):
-        g = self.spec.membership_grid(self.n_b)
-        return jnp.asarray(g)[by, bx]
+        # the coarse block grid is the same fractal at level r_b, so the
+        # digit test replaces the dense membership_grid(n_b) this used to
+        # rebuild on every (traced) call
+        return self.spec.is_member(bx, by, self.n_b)
+
+    def cell_member(self, gx, gy, n: int):
+        return self.spec.is_member(gx, gy, n)
+
+
+def _is_host(x) -> bool:
+    return isinstance(x, (int, np.integer, np.ndarray))
 
 
 def _isqrt(x):
-    """Traceable integer sqrt for the triangular decode (related work [18]
-    solves an order-m equation; here m=2 so it is a square root).  float32
-    sqrt + correction steps is exact for x < 2**24, i.e. block grids up to
-    m ~ 5790 (seq 2.9M at 512-token blocks) -- asserted by the domains."""
+    """Integer sqrt for the triangular decode (related work [18] solves
+    an order-m equation; here m=2 so it is a square root).  float32
+    sqrt + correction steps is exact for x < 2**24, i.e. block grids up
+    to m ~ 5790 (seq 2.9M at 512-token blocks) -- asserted by the
+    domains.  Dispatches on input type so the same decode runs traced
+    (jit / Pallas index_map) and on host (coords_host table builds)."""
+    if _is_host(x):
+        x = np.asarray(x, np.int64)
+        s = np.floor(np.sqrt(x.astype(np.float64))).astype(np.int64)
+        s = np.where((s + 1) * (s + 1) <= x, s + 1, s)
+        return np.where(s * s > x, s - 1, s)
     x = jnp.asarray(x, jnp.int32)
     s = jnp.asarray(jnp.floor(jnp.sqrt(jnp.asarray(x, jnp.float32))), jnp.int32)
     for _ in range(2):
@@ -172,8 +209,10 @@ class TriangularDomain(BlockDomain):
 
     def block_coords(self, i):
         # row q = floor((sqrt(8i+1)-1)/2); col k = i - q(q+1)/2  (k <= q)
-        q = (_isqrt(8 * jnp.asarray(i, jnp.int32) + 1) - 1) // 2
-        k = jnp.asarray(i, jnp.int32) - q * (q + 1) // 2
+        if not _is_host(i):
+            i = jnp.asarray(i, jnp.int32)
+        q = (_isqrt(8 * i + 1) - 1) // 2
+        k = i - q * (q + 1) // 2
         if isinstance(i, (int, np.integer)):
             return int(k), int(q)
         return k, q  # (bx=key block, by=query block)
@@ -204,21 +243,42 @@ class BandDomain(BlockDomain):
         return (self.m, self.m)
 
     def block_coords(self, i):
-        i = jnp.asarray(i, jnp.int32)
+        if _is_host(i):
+            where, i = np.where, np.asarray(i, np.int64)
+        else:
+            where, i = jnp.where, jnp.asarray(i, jnp.int32)
         tw = self._tw
         # triangular head (rows 0..w-1), then dense band rows of width w
         q_tri = (_isqrt(8 * i + 1) - 1) // 2
         k_tri = i - q_tri * (q_tri + 1) // 2
         j = i - tw
-        q_band = self.w + j // self.w
-        k_band = q_band - self.w + 1 + j % self.w
+        # clamp to >= 0 so host int overflow / traced negatives in the
+        # head region stay inert before the select
+        jw = where(j < 0, 0, j)
+        q_band = self.w + jw // self.w
+        k_band = q_band - self.w + 1 + jw % self.w
         in_tri = i < tw
-        q = jnp.where(in_tri, q_tri, q_band)
-        k = jnp.where(in_tri, k_tri, k_band)
+        q = where(in_tri, q_tri, q_band)
+        k = where(in_tri, k_tri, k_band)
         return k, q
 
     def contains(self, bx, by):
         return (bx <= by) & (bx > by - self.w)
+
+
+def make_fractal_domain(fractal: str, n_b: int) -> BlockDomain:
+    """Factory used by the embedded-fractal kernels (write / CA).
+
+    fractal: "sierpinski-gasket" (the paper's gasket, O(1) bit-test
+    membership) or any registered FractalSpec name ("sierpinski-carpet",
+    "vicsek-cross", ... -- O(r*k) digit-test membership)."""
+    if fractal in ("sierpinski", "sierpinski-gasket"):
+        return SierpinskiDomain(n_b)
+    if fractal not in F.FRACTALS:
+        raise ValueError(
+            f"unknown fractal {fractal!r}; registered: "
+            f"{tuple(F.FRACTALS)}")
+    return GeneralizedFractalDomain(F.FRACTALS[fractal], n_b)
 
 
 def make_attention_domain(kind: str, m_q: int, m_k: int, window_blocks: int = 0):

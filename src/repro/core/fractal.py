@@ -170,6 +170,7 @@ class FractalSpec:
             raise ValueError("need one offset per copy")
         self.name, self.k, self.m = name, k, m
         self.offsets = tuple(tuple(o) for o in offsets)
+        self._grid_cache = {}  # n -> dense membership grid (oracle)
 
     @property
     def hausdorff(self) -> float:
@@ -185,24 +186,53 @@ class FractalSpec:
         return self.k ** self.scale_level(n)
 
     def lambda_map_linear(self, i, r: int):
-        """Generalized digit-unrolled map: base-k digits of i choose copies."""
+        """Generalized digit-unrolled map: base-k digits of i choose copies.
+
+        The copy-offset lookup is a select chain over the k static
+        offsets (not a gather from a table), so the same code runs on
+        host ints/numpy AND inside Pallas ``BlockSpec.index_map`` scalar
+        code, which must not capture array constants."""
+        where = np.where if isinstance(i, (int, np.integer, np.ndarray)) \
+            else jnp.where
         lx = i * 0
         ly = i * 0
-        dxs = np.array([o[0] for o in self.offsets])
-        dys = np.array([o[1] for o in self.offsets])
         for mu in range(1, r + 1):
             c = (i // self.k ** (mu - 1)) % self.k
-            if isinstance(i, (int, np.integer)):
-                dx, dy = int(dxs[c]), int(dys[c])
-            else:
-                dx = jnp.asarray(dxs)[c]
-                dy = jnp.asarray(dys)[c]
+            dx, dy = c * 0, c * 0
+            for j, (ox, oy) in enumerate(self.offsets):
+                dx = where(c == j, ox, dx)
+                dy = where(c == j, oy, dy)
             lx = lx + dx * self.m ** (mu - 1)
             ly = ly + dy * self.m ** (mu - 1)
         return lx, ly
 
+    def is_member(self, x, y, n: int):
+        """Traceable membership test: (x, y) is in the level-r fractal iff
+        every base-m digit pair of (x, y) is one of the copy offsets.
+
+        Generalizes the gasket's O(1) bit test to any F^{k,s}: O(r * k)
+        straight-line int ops, usable on python ints, jnp arrays, and
+        inside Pallas kernels / index maps (no dense grid needed)."""
+        r = self.scale_level(n)
+        ok = None
+        for mu in range(r):
+            p = self.m ** mu
+            dx = (x // p) % self.m
+            dy = (y // p) % self.m
+            lvl = None
+            for (ox, oy) in self.offsets:
+                hit = (dx == ox) & (dy == oy)
+                lvl = hit if lvl is None else (lvl | hit)
+            ok = lvl if ok is None else (ok & lvl)
+        if ok is None:  # r == 0: the single cell is the whole fractal
+            ok = (x == 0) & (y == 0)
+        return ok
+
     def membership_grid(self, n: int) -> np.ndarray:
-        """Dense boolean n x n occupancy via recursive construction (oracle)."""
+        """Dense boolean n x n occupancy via recursive construction (oracle).
+        Memoized per instance: re-entered per traced index_map call."""
+        if n in self._grid_cache:
+            return self._grid_cache[n]
         r = self.scale_level(n)
         g = np.ones((1, 1), dtype=bool)
         for mu in range(1, r + 1):
@@ -211,6 +241,8 @@ class FractalSpec:
             for (dx, dy) in self.offsets:
                 big[dy * size:(dy + 1) * size, dx * size:(dx + 1) * size] |= g
             g = big
+        g.setflags(write=False)
+        self._grid_cache[n] = g
         return g
 
 

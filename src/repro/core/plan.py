@@ -1,0 +1,301 @@
+"""GridPlan: the unified block-space execution engine.
+
+A ``GridPlan`` binds a :class:`~repro.core.domain.BlockDomain` (the
+paper's compact parallel space and its lambda map) to one of three
+*lowering strategies* and emits everything a Pallas kernel needs to run
+over that domain:
+
+* ``grid``        -- the launch grid (optionally with leading batch dims),
+* ``index_map``   -- per-operand ``BlockSpec`` index maps built from one
+                     shared decode of the grid step -> (bx, by),
+* ``kernel coords`` -- the in-kernel ``(bx, by, valid)`` accessor,
+* ``pallas_call`` -- a ``pl.pallas_call`` wrapper that hides the
+                     lowering-specific grid-spec plumbing.
+
+Lowerings
+---------
+
+``closed_form``
+    The paper's per-block map: the grid has ``domain.num_blocks`` steps
+    and each ``index_map`` evaluates ``domain.block_coords(t)`` inline
+    (straight-line scalar math, unrolled at trace time).  The decode is
+    defined once on the plan and shared by every operand's index map, so
+    XLA/Mosaic CSE sees one digit-unrolling chain, not one per operand.
+
+``prefetch_lut``
+    The lookup-table realization (Navarro et al., "Efficient GPU Thread
+    Mapping on Embedded 2D Fractals"; the TPU analogue ships the host
+    ``coords_host()`` table through ``pltpu.PrefetchScalarGridSpec`` so
+    each decode is an O(1) scalar-memory read instead of the O(r) digit
+    unrolling / integer-sqrt chain).  Bit-identical to ``closed_form``
+    by construction: the table *is* the closed form, evaluated on host.
+
+``bounding``
+    The paper's baseline: launch the full bounding-box grid and discard
+    non-member blocks at run time via ``domain.contains``.
+
+``"compact"`` is accepted as a backward-compatible alias of
+``closed_form`` (the name the kernels used before this engine existed).
+
+Kernels written against a plan receive a :class:`BlockCoords` as their
+first argument and are lowering-agnostic; any registered domain works in
+any kernel under any lowering.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import fractal as F
+from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
+                     GeneralizedFractalDomain, SierpinskiDomain,
+                     TriangularDomain)
+
+LOWERINGS = ("closed_form", "prefetch_lut", "bounding")
+_ALIASES = {"compact": "closed_form"}
+
+
+def normalize_lowering(name: str) -> str:
+    """Map user-facing lowering names (incl. legacy aliases) to canonical."""
+    name = _ALIASES.get(name, name)
+    if name not in LOWERINGS:
+        raise ValueError(
+            f"unknown lowering {name!r}; expected one of {LOWERINGS} "
+            f"or aliases {tuple(_ALIASES)}")
+    return name
+
+
+def xla_schedule(lowering: str) -> str:
+    """The XLA-level flash-attention schedule equivalent to a lowering.
+
+    ``closed_form``/``prefetch_lut`` only launch member blocks -- the
+    XLA mirror is the ``triangular`` (compact) schedule; ``bounding``
+    mirrors the ``dense`` masked schedule."""
+    return "dense" if normalize_lowering(lowering) == "bounding" else \
+        "triangular"
+
+
+class BlockCoords:
+    """In-kernel view of the current block: embedded coords + validity.
+
+    ``bx``/``by``   -- embedded block coordinates (traced i32 scalars).
+    ``batch``       -- tuple of leading batch-grid indices.
+    ``valid``       -- membership predicate, or ``None`` when the plan
+                       only enumerates member blocks (compact lowerings)
+                       so no run-time discard is needed.
+    ``first_step``  -- predicate for "is this the first grid step",
+                       usable for one-time init of revisited outputs.
+    """
+
+    __slots__ = ("batch", "bx", "by", "valid", "first_step")
+
+    def __init__(self, batch, bx, by, valid, first_step):
+        self.batch = tuple(batch)
+        self.bx = bx
+        self.by = by
+        self.valid = valid
+        self.first_step = first_step
+
+    def when_valid(self, body: Callable[[], None]) -> None:
+        """Run ``body`` for member blocks only (no-op guard when the
+        lowering already guarantees membership)."""
+        if self.valid is None:
+            body()
+        else:
+            pl.when(self.valid)(body)
+
+
+class GridPlan:
+    """Execution plan for one kernel launch over a block domain.
+
+    Parameters
+    ----------
+    domain:      the block domain to enumerate.
+    lowering:    "closed_form" | "prefetch_lut" | "bounding" (or the
+                 legacy alias "compact").
+    batch_dims:  leading grid dimensions iterated outside the domain
+                 (e.g. ``(batch * heads,)`` for attention).
+    """
+
+    def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
+                 batch_dims: Sequence[int] = ()):
+        self.domain = domain
+        self.lowering = normalize_lowering(lowering)
+        self.batch_dims = tuple(int(d) for d in batch_dims)
+
+    # -- grid ---------------------------------------------------------------
+
+    @property
+    def domain_dims(self) -> int:
+        """How many trailing grid dimensions the domain occupies."""
+        return 2 if self.lowering == "bounding" else 1
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        if self.lowering == "bounding":
+            nbx, nby = self.domain.bounding_box
+            return self.batch_dims + (nby, nbx)
+        return self.batch_dims + (self.domain.num_blocks,)
+
+    @property
+    def num_steps(self) -> int:
+        return int(np.prod(self.grid))
+
+    # -- scalar-prefetch table ---------------------------------------------
+
+    @property
+    def num_scalar_prefetch(self) -> int:
+        return 1 if self.lowering == "prefetch_lut" else 0
+
+    def lut(self) -> jnp.ndarray:
+        """(num_blocks, 2) i32 host-built coordinate table (bx, by)."""
+        return jnp.asarray(self.domain.coords_host())
+
+    # -- the one shared decode ---------------------------------------------
+
+    def _decode(self, grid_ids, lut_ref=None):
+        """grid step -> (batch_ids, bx, by).  Shared by every operand's
+        index map and by the kernel prologue."""
+        nb = len(self.batch_dims)
+        batch = tuple(grid_ids[:nb])
+        if self.lowering == "bounding":
+            by, bx = grid_ids[nb], grid_ids[nb + 1]
+        elif self.lowering == "prefetch_lut":
+            t = grid_ids[nb]
+            bx, by = lut_ref[t, 0], lut_ref[t, 1]
+        else:  # closed_form
+            bx, by = self.domain.block_coords(grid_ids[nb])
+        return batch, bx, by
+
+    # -- per-operand index maps --------------------------------------------
+
+    def index_map(self, place: Callable) -> Callable:
+        """Build one operand's ``BlockSpec`` index map.
+
+        ``place(bx, by, *batch_ids)`` returns the operand's block index
+        tuple; the plan supplies the decoded coordinates with the arity
+        and extra scalar-ref argument each lowering requires."""
+        if self.lowering == "prefetch_lut":
+            def im(*args):
+                *grid_ids, lut_ref = args
+                batch, bx, by = self._decode(grid_ids, lut_ref)
+                return place(bx, by, *batch)
+        else:
+            def im(*grid_ids):
+                batch, bx, by = self._decode(grid_ids)
+                return place(bx, by, *batch)
+        return im
+
+    def block_spec(self, block_shape, place: Callable) -> pl.BlockSpec:
+        return pl.BlockSpec(block_shape, self.index_map(place))
+
+    # -- in-kernel accessor -------------------------------------------------
+
+    def kernel_coords(self, lut_ref=None) -> BlockCoords:
+        grid_ids = tuple(pl.program_id(i) for i in range(len(self.grid)))
+        batch, bx, by = self._decode(grid_ids, lut_ref)
+        valid = None
+        if self.lowering == "bounding" and not getattr(
+                self.domain, "always_member", False):
+            valid = self.domain.contains(bx, by)
+        first = grid_ids[0] == 0
+        for g in grid_ids[1:]:
+            first = first & (g == 0)
+        return BlockCoords(batch, bx, by, valid, first)
+
+    # -- pallas_call wrapper ------------------------------------------------
+
+    def pallas_call(self, kernel: Callable, *, in_specs, out_specs,
+                    out_shape, scratch_shapes=(),
+                    input_output_aliases: Optional[dict] = None,
+                    interpret: bool = False, **kwargs) -> Callable:
+        """Wrap ``pl.pallas_call`` for this plan.
+
+        ``kernel(coords, *refs)`` is lowering-agnostic; the wrapper
+        injects the decoded :class:`BlockCoords`, prepends the prefetch
+        table operand under ``prefetch_lut`` (shifting any
+        ``input_output_aliases`` accordingly), and selects the plain
+        grid vs ``PrefetchScalarGridSpec`` path."""
+        if self.lowering == "prefetch_lut":
+            def wrapped(lut_ref, *refs):
+                kernel(self.kernel_coords(lut_ref), *refs)
+
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=self.grid,
+                in_specs=list(in_specs),
+                out_specs=out_specs,
+                scratch_shapes=list(scratch_shapes),
+            )
+            aliases = None
+            if input_output_aliases:
+                # operand indices count the prefetch table as input 0
+                aliases = {i + 1: o for i, o in input_output_aliases.items()}
+            call = pl.pallas_call(
+                wrapped, grid_spec=grid_spec, out_shape=out_shape,
+                input_output_aliases=aliases or {}, interpret=interpret,
+                **kwargs)
+            lut = self.lut()
+            return lambda *operands: call(lut, *operands)
+
+        def wrapped(*refs):
+            kernel(self.kernel_coords(), *refs)
+
+        call = pl.pallas_call(
+            wrapped, grid=self.grid, in_specs=list(in_specs),
+            out_specs=out_specs, out_shape=out_shape,
+            scratch_shapes=list(scratch_shapes),
+            input_output_aliases=input_output_aliases or {},
+            interpret=interpret, **kwargs)
+        return lambda *operands: call(*operands)
+
+    # -- host-side geometry helpers ----------------------------------------
+
+    def row_extents(self) -> np.ndarray:
+        """(nby, 2) i32 host array of [min_bx, max_bx] per block row.
+
+        Rows with no member blocks get [0, -1].  This is the per-row
+        k-extent the XLA-level flash schedules consume (the block-space
+        work-saving of Theorem 2 applied row-wise).  One vectorized
+        pass over the table, O(num_blocks)."""
+        nbx, nby = self.domain.bounding_box
+        lo = np.full((nby,), nbx, np.int64)
+        hi = np.full((nby,), -1, np.int64)
+        coords = self.domain.coords_host()
+        np.minimum.at(lo, coords[:, 1], coords[:, 0])
+        np.maximum.at(hi, coords[:, 1], coords[:, 0])
+        lo[hi < 0] = 0
+        return np.stack([lo, hi], -1).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Domain registry: every compact domain the engine knows how to lower.
+# Used by the equivalence tests and the lowering A/B benchmarks.
+# ---------------------------------------------------------------------------
+
+def registered_domains(size: str = "small") -> dict:
+    """Representative instances of every registered domain family.
+
+    size: "small" (fast interpret-mode tests) or "medium"."""
+    if size == "small":
+        return {
+            "sierpinski": SierpinskiDomain(8),
+            "carpet": GeneralizedFractalDomain(F.CARPET, 9),
+            "vicsek": GeneralizedFractalDomain(F.VICSEK, 9),
+            "triangular": TriangularDomain(6),
+            "band": BandDomain(8, 3),
+            "bounding-box": BoundingBoxDomain(4, 3),
+        }
+    return {
+        "sierpinski": SierpinskiDomain(32),
+        "carpet": GeneralizedFractalDomain(F.CARPET, 27),
+        "vicsek": GeneralizedFractalDomain(F.VICSEK, 27),
+        "triangular": TriangularDomain(17),
+        "band": BandDomain(24, 5),
+        "bounding-box": BoundingBoxDomain(7, 5),
+    }

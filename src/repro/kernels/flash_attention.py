@@ -7,11 +7,15 @@ block domain -- the 2-simplex case of the authors' block-space program
 ``m_q x m_k`` and discarding invalid blocks at run time (the standard
 masked-flash formulation), the compact grid launches exactly
 ``T(m) = m(m+1)/2`` (causal) or ``T(w) + (m-w)w`` (local window) steps
-and decodes ``t -> (q_block, k_block)`` with the closed-form inverse of
-the triangular enumeration (integer sqrt -- the m=2 case of the
-"order-m equation" map of related work [18]).
+and decodes ``t -> (q_block, k_block)`` either in closed form (the
+integer-sqrt inverse of the triangular enumeration -- the m=2 case of
+the "order-m equation" map of related work [18]) or through the
+scalar-prefetch lookup table, both emitted by the shared
+:class:`~repro.core.plan.GridPlan` engine.  ``grid_mode`` selects the
+lowering: ``closed_form`` (alias ``compact``) | ``prefetch_lut`` |
+``bounding``.
 
-Grid layout: ``(batch*heads, T)``; the triangular enumeration is
+Grid layout: ``(batch*heads, T)``; the compact enumerations are
 row-major in q, so all k-steps of one q row are consecutive: the online
 softmax state lives in VMEM scratch and the output block is written once
 per row (standard flash revisiting pattern).  GQA folds the kv-head
@@ -30,7 +34,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.domain import BandDomain, TriangularDomain
+from repro.core.domain import make_attention_domain
+from repro.core.plan import GridPlan
 
 NEG_INF = float(-1e30)  # avoid true -inf so exp() stays nan-free
 
@@ -43,22 +48,9 @@ def _row_bounds(kind, qb, m_k, wb):
     return 0 * qb, qb * 0 + (m_k - 1)  # full
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                 kind, window, scale, block_q, block_k, m_k, wb,
-                 grid_mode, domain):
-    if grid_mode == "compact":
-        t = pl.program_id(1)
-        kb, qb = domain.block_coords(t)
-        valid = None
-    else:
-        qb = pl.program_id(1)
-        kb = pl.program_id(2)
-        if kind == "causal":
-            valid = kb <= qb
-        elif kind == "local":
-            valid = (kb <= qb) & (kb >= qb - (wb - 1))
-        else:
-            valid = (kb == kb)
+def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                 *, kind, window, scale, block_q, block_k, m_k, wb):
+    kb, qb = coords.bx, coords.by
     start, end = _row_bounds(kind, qb, m_k, wb)
 
     def body():
@@ -101,10 +93,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             l = jnp.where(l == 0, 1.0, l)
             o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
 
-    if valid is None:
-        body()
-    else:
-        pl.when(valid)(body)
+    coords.when_valid(body)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -117,7 +106,9 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
 
     kind:      "causal" | "local" (window tokens) | "full"
-    grid_mode: "compact" (paper's block-space map) | "bounding" (baseline)
+    grid_mode: "closed_form" (alias "compact": the paper's block-space
+               map) | "prefetch_lut" (scalar-prefetch table decode) |
+               "bounding" (baseline full grid + run-time discard)
     causal/local require Sq == Sk (training/prefill self-attention).
     """
     if interpret is None:
@@ -141,54 +132,27 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     if kind in ("causal", "local") and (sq != sk or block_q != block_k):
         raise ValueError("causal/local require square block grids")
 
-    if kind == "causal":
-        domain = TriangularDomain(m_q)
-    elif kind == "local":
-        domain = BandDomain(m_q, wb)
-    else:
-        domain = None
+    domain = make_attention_domain(kind, m_q, m_k, wb)
+    plan = GridPlan(domain, grid_mode, batch_dims=(b * h,))
 
-    if grid_mode == "compact" and domain is not None:
-        grid = (b * h, domain.num_blocks)
+    def q_place(bx, by, bh):
+        return (bh // h, bh % h, by, 0)
 
-        def q_idx(bh, t):
-            kb, qb = domain.block_coords(t)
-            return (bh // h, bh % h, qb, 0)
-
-        def kv_idx(bh, t):
-            kb, qb = domain.block_coords(t)
-            return (bh // h, (bh % h) // group, kb, 0)
-
-        def o_idx(bh, t):
-            kb, qb = domain.block_coords(t)
-            return (bh // h, bh % h, qb, 0)
-    else:
-        grid_mode = "bounding"
-        grid = (b * h, m_q, m_k)
-
-        def q_idx(bh, qb, kb):
-            return (bh // h, bh % h, qb, 0)
-
-        def kv_idx(bh, qb, kb):
-            return (bh // h, (bh % h) // group, kb, 0)
-
-        def o_idx(bh, qb, kb):
-            return (bh // h, bh % h, qb, 0)
+    def kv_place(bx, by, bh):
+        return (bh // h, (bh % h) // group, bx, 0)
 
     kernel = functools.partial(
         _attn_kernel, kind=kind, window=window, scale=scale,
-        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb,
-        grid_mode=grid_mode, domain=domain)
+        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb)
 
-    return pl.pallas_call(
+    call = plan.pallas_call(
         kernel,
-        grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), q_idx),
-            pl.BlockSpec((1, 1, block_k, d), kv_idx),
-            pl.BlockSpec((1, 1, block_k, d), kv_idx),
+            plan.block_spec((1, 1, block_q, d), q_place),
+            plan.block_spec((1, 1, block_k, d), kv_place),
+            plan.block_spec((1, 1, block_k, d), kv_place),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, d), o_idx),
+        out_specs=plan.block_spec((1, 1, block_q, d), q_place),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
@@ -196,4 +160,5 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
             pltpu.VMEM((block_q, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )
+    return call(q, k, v)

@@ -1,15 +1,16 @@
-"""Cellular-automaton / diffusion step on the embedded gasket, as a
+"""Cellular-automaton / diffusion step on an embedded fractal, as a
 block-space Pallas kernel (the application class the paper motivates:
 nearest-neighbour data-parallel simulation over the fractal).
 
 Halo exchange: the kernel receives five views of the state array (center
 + N/S/W/E neighbour tiles) via five BlockSpecs whose index_maps are the
-lambda-mapped block coordinate shifted by +-1 (clamped; contributions
-from clamped-out-of-range tiles are masked in-kernel).  The compact grid
-visits only member blocks; a *stale* buffer (zeros outside the fractal)
-is aliased to the output so unvisited blocks stay zero -- the classic
-double-buffer CA scheme, which is what keeps the lambda grid applicable
-to stencils, not just pointwise writes.
+plan-decoded block coordinate shifted by +-1 (clamped; contributions
+from clamped-out-of-range tiles are masked in-kernel).  All three
+GridPlan lowerings apply: the compact ones visit only member blocks; a
+*stale* buffer (zeros outside the fractal) is aliased to the output so
+unvisited blocks stay zero -- the classic double-buffer CA scheme, which
+is what keeps the compact grids applicable to stencils, not just
+pointwise writes.
 """
 from __future__ import annotations
 
@@ -19,20 +20,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import fractal as F
-from .sierpinski_write import _member_mask
+from repro.core.domain import make_fractal_domain
+from repro.core.plan import GridPlan
+from .sierpinski_write import _cell_mask
 
 
-def _ca_kernel(c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref, *,
-               rule, alpha, block, n, n_b, r_b, grid_mode):
-    if grid_mode == "compact":
-        i = pl.program_id(0)
-        bx, by = F.lambda_map_linear(i, r_b)
-        is_member_block = True
-    else:
-        by = pl.program_id(0)
-        bx = pl.program_id(1)
-        is_member_block = (bx & (n_b - 1 - by)) == 0
+def _ca_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref,
+               *, rule, alpha, block, n, n_b, domain):
+    bx, by = coords.bx, coords.by
 
     def body():
         c = c_ref[...]
@@ -48,7 +43,7 @@ def _ca_kernel(c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref, *,
         right = jnp.concatenate([c[:, 1:], east], axis=1)
         nsum = up + down + left + right
 
-        member = _member_mask(bx, by, block, n)
+        member = _cell_mask(domain, bx, by, block, n)
         if rule == "parity":
             new = jnp.mod(c + nsum, 2)
         else:  # diffusion: graph Laplacian over member neighbours
@@ -60,24 +55,23 @@ def _ca_kernel(c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref, *,
             def nbr_member(dx, dy):
                 x, y = gx + dx, gy + dy
                 inside = (x >= 0) & (x < n) & (y >= 0) & (y < n)
-                return (inside & ((x & (n - 1 - y)) == 0)).astype(c.dtype)
+                return (inside & domain.cell_member(x, y, n)).astype(c.dtype)
 
             deg = (nbr_member(0, -1) + nbr_member(0, 1) +
                    nbr_member(-1, 0) + nbr_member(1, 0))
             new = c + jnp.asarray(alpha, c.dtype) * (nsum - deg * c)
         o_ref[...] = jnp.where(member, new, 0).astype(o_ref.dtype)
 
-    if grid_mode == "compact":
-        body()
-    else:
-        pl.when(is_member_block)(body)
+    coords.when_valid(body)
 
 
 @functools.partial(jax.jit, static_argnames=("rule", "alpha", "block",
-                                             "grid_mode", "interpret"))
+                                             "grid_mode", "fractal",
+                                             "interpret"))
 def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             rule: str = "parity", alpha: float = 0.25, block: int = 128,
             grid_mode: str = "compact",
+            fractal: str = "sierpinski-gasket",
             interpret: bool | None = None) -> jnp.ndarray:
     """One CA step.  ``stale_buf`` must be zero outside the fractal (e.g.
     the state from two steps ago, or zeros); it is donated as the output
@@ -87,56 +81,29 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
         interpret = jax.default_backend() != "tpu"
     block = min(block, n)
     n_b = n // block
-    r_b = F.scale_level(n_b)
+    domain = make_fractal_domain(fractal, n_b)
+    plan = GridPlan(domain, grid_mode)
 
-    if grid_mode == "compact":
-        grid = (3 ** r_b,)
+    def _clamp(v):
+        return jnp.clip(v, 0, n_b - 1)
 
-        def blk(i):
-            lx, ly = F.lambda_map_linear(i, r_b)
-            return lx, ly
-    elif grid_mode == "bounding":
-        grid = (n_b, n_b)
-
-        def blk(i, j):
-            return j, i
-    else:
-        raise ValueError(grid_mode)
-
-    def _clamp(v, lo, hi):
-        return jnp.clip(v, lo, hi)
-
-    def idx_center(*a):
-        bx, by = blk(*a)
-        return (by, bx)
-
-    def idx_north(*a):
-        bx, by = blk(*a)
-        return (_clamp(by - 1, 0, n_b - 1), bx)
-
-    def idx_south(*a):
-        bx, by = blk(*a)
-        return (_clamp(by + 1, 0, n_b - 1), bx)
-
-    def idx_west(*a):
-        bx, by = blk(*a)
-        return (by, _clamp(bx - 1, 0, n_b - 1))
-
-    def idx_east(*a):
-        bx, by = blk(*a)
-        return (by, _clamp(bx + 1, 0, n_b - 1))
-
-    bs = functools.partial(pl.BlockSpec, (block, block))
-    kernel = functools.partial(_ca_kernel, rule=rule, alpha=alpha,
-                               block=block, n=n, n_b=n_b, r_b=r_b,
-                               grid_mode=grid_mode)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[bs(idx_center), bs(idx_north), bs(idx_south),
-                  bs(idx_west), bs(idx_east), bs(idx_center)],
-        out_specs=bs(idx_center),
+    bs = functools.partial(plan.block_spec, (block, block))
+    center = bs(lambda bx, by: (by, bx))
+    in_specs = [
+        center,
+        bs(lambda bx, by: (_clamp(by - 1), bx)),   # north
+        bs(lambda bx, by: (_clamp(by + 1), bx)),   # south
+        bs(lambda bx, by: (by, _clamp(bx - 1))),   # west
+        bs(lambda bx, by: (by, _clamp(bx + 1))),   # east
+        center,                                    # stale double buffer
+    ]
+    call = plan.pallas_call(
+        functools.partial(_ca_kernel, rule=rule, alpha=alpha, block=block,
+                          n=n, n_b=n_b, domain=domain),
+        in_specs=in_specs,
+        out_specs=center,
         out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
         input_output_aliases={5: 0},
         interpret=interpret,
-    )(state, state, state, state, state, stale_buf)
+    )
+    return call(state, state, state, state, state, stale_buf)

@@ -1,17 +1,23 @@
-"""The paper's SS IV microbenchmark as Pallas TPU kernels.
+"""The paper's SS IV microbenchmark as Pallas TPU kernels, lowered
+through the unified :class:`~repro.core.plan.GridPlan` engine.
 
-Two grid modes, exactly mirroring the paper's A/B:
+Three lowerings, extending the paper's A/B to the LUT variant of the
+follow-up work:
 
-* ``compact``  -- the lambda(w) map: the grid has 3**r_b steps and
-  ``BlockSpec.index_map`` computes lambda on the scalar core
-  (the TPU-native realization of the paper's per-block map; the
-  O(log log n) warp reduction is replaced by pipelined scalar math).
+* ``closed_form`` (alias ``compact``) -- the lambda(w) map: the grid has
+  ``domain.num_blocks`` steps and ``BlockSpec.index_map`` computes
+  lambda inline on the scalar core (the TPU-native realization of the
+  paper's per-block map).
+* ``prefetch_lut`` -- the same enumeration shipped as a host-built
+  coordinate table via scalar prefetch: the decode becomes an O(1)
+  table read instead of the O(r) digit unrolling.
 * ``bounding`` -- the bounding-box baseline: n_b x n_b grid steps, with
   the run-time discard ``pl.when(block is member)``.
 
 Intra-block threads use the paper's *bounding sub-boxes* option: a VPU
-mask from ``broadcasted_iota`` evaluating the membership bit test
-``x & (n-1-y) == 0``.
+mask from ``broadcasted_iota`` evaluating the domain's cell-membership
+test (the gasket's ``x & (n-1-y) == 0`` bit test, or the generalized
+base-m digit test for carpet / Vicsek / any registered FractalSpec).
 
 The written matrix is passed in and aliased to the output so that blocks
 never visited by the compact grid keep their previous contents (the
@@ -26,114 +32,95 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import fractal as F
+from repro.core.domain import BlockDomain, make_fractal_domain
+from repro.core.plan import GridPlan
 
 
-def _member_mask(bx, by, block: int, n: int):
-    """VPU membership mask for the (bx, by) tile (bounding sub-boxes)."""
+def _cell_mask(domain: BlockDomain, bx, by, block: int, n: int):
+    """VPU cell-membership mask for the (bx, by) tile (bounding
+    sub-boxes intra-block option)."""
     iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
     ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
     gx = bx * block + ix
     gy = by * block + iy
-    return (gx & (n - 1 - gy)) == 0
+    return domain.cell_member(gx, gy, n)
 
 
-def _write_kernel_compact(m_ref, o_ref, *, value, block, n, r_b):
-    i = pl.program_id(0)
-    bx, by = F.lambda_map_linear(i, r_b)
-    mask = _member_mask(bx, by, block, n)
-    o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype), m_ref[...])
-
-
-def _write_kernel_bounding(m_ref, o_ref, *, value, block, n, n_b):
-    by = pl.program_id(0)
-    bx = pl.program_id(1)
-    # run-time discard: the whole block returns if outside the fractal
-    @pl.when((bx & (n_b - 1 - by)) == 0)
-    def _():
-        mask = _member_mask(bx, by, block, n)
+def _write_kernel(coords, m_ref, o_ref, *, value, block, n, domain):
+    def body():
+        mask = _cell_mask(domain, coords.bx, coords.by, block, n)
         o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype),
                                m_ref[...])
+
+    coords.when_valid(body)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
-                                    "interpret"))
+                                    "fractal", "interpret"))
 def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      block: int = 128, grid_mode: str = "compact",
+                     fractal: str = "sierpinski-gasket",
                      interpret: bool | None = None) -> jnp.ndarray:
-    """Write ``value`` to every gasket cell of the embedded (n, n) matrix."""
+    """Write ``value`` to every fractal cell of the embedded (n, n)
+    matrix.  grid_mode: closed_form (alias compact) | prefetch_lut |
+    bounding; fractal: any registered FractalSpec name."""
     n = m.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     block = min(block, n)
     n_b = n // block
-    r_b = F.scale_level(n_b)
+    domain = make_fractal_domain(fractal, n_b)
+    plan = GridPlan(domain, grid_mode)
 
-    if grid_mode == "compact":
-        kernel = functools.partial(_write_kernel_compact, value=value,
-                                   block=block, n=n, r_b=r_b)
-        grid = (3 ** r_b,)
-
-        def idx(i):
-            lx, ly = F.lambda_map_linear(i, r_b)
-            return (ly, lx)  # (row block, col block)
-    elif grid_mode == "bounding":
-        kernel = functools.partial(_write_kernel_bounding, value=value,
-                                   block=block, n=n, n_b=n_b)
-        grid = (n_b, n_b)
-
-        def idx(i, j):
-            return (i, j)
-    else:
-        raise ValueError(grid_mode)
-
-    spec = pl.BlockSpec((block, block), idx)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    spec = plan.block_spec((block, block), lambda bx, by: (by, bx))
+    call = plan.pallas_call(
+        functools.partial(_write_kernel, value=value, block=block, n=n,
+                          domain=domain),
         in_specs=[spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
         input_output_aliases={0: 0},
         interpret=interpret,
-    )(m)
+    )
+    return call(m)
 
 
-def _sum_kernel_compact(m_ref, o_ref, *, block, n, r_b):
-    i = pl.program_id(0)
-    bx, by = F.lambda_map_linear(i, r_b)
-    mask = _member_mask(bx, by, block, n)
-
-    @pl.when(i == 0)
+def _sum_kernel(coords, m_ref, o_ref, *, block, n, domain):
+    @pl.when(coords.first_step)
     def _():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    tile = jnp.where(mask, m_ref[...], 0).astype(jnp.float32)
-    o_ref[0, 0] += jnp.sum(tile)
+    def body():
+        mask = _cell_mask(domain, coords.bx, coords.by, block, n)
+        tile = jnp.where(mask, m_ref[...], 0).astype(jnp.float32)
+        o_ref[0, 0] += jnp.sum(tile)
+
+    coords.when_valid(body)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "grid_mode",
+                                             "fractal", "interpret"))
 def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
+                   grid_mode: str = "compact",
+                   fractal: str = "sierpinski-gasket",
                    interpret: bool | None = None) -> jnp.ndarray:
-    """f32 sum over gasket cells, compact lambda grid, sequential accumulate."""
+    """f32 sum over fractal cells, sequential accumulate over the plan's
+    grid (any lowering; the output block is revisited every step)."""
     n = m.shape[0]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     block = min(block, n)
     n_b = n // block
-    r_b = F.scale_level(n_b)
+    domain = make_fractal_domain(fractal, n_b)
+    plan = GridPlan(domain, grid_mode)
 
-    def idx(i):
-        lx, ly = F.lambda_map_linear(i, r_b)
-        return (ly, lx)
-
-    out = pl.pallas_call(
-        functools.partial(_sum_kernel_compact, block=block, n=n, r_b=r_b),
-        grid=(3 ** r_b,),
-        in_specs=[pl.BlockSpec((block, block), idx)],
-        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+    call = plan.pallas_call(
+        functools.partial(_sum_kernel, block=block, n=n, domain=domain),
+        in_specs=[plan.block_spec((block, block),
+                                  lambda bx, by: (by, bx))],
+        out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         interpret=interpret,
-    )(m)
-    return out[0, 0]
+    )
+    return call(m)[0, 0]

@@ -97,10 +97,19 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--grid-lowering", default="",
+                    choices=("", "closed_form", "prefetch_lut", "bounding",
+                             "compact"),
+                    help="GridPlan lowering for the attention block "
+                         "domain (default: the arch's attn_schedule)")
     args = ap.parse_args()
 
     from repro.configs import get_config
     cfg = get_config(args.arch, smoke=True)
+    if args.grid_lowering:
+        cfg = cfg.replace(grid_lowering=args.grid_lowering)
+        print(f"grid lowering: {cfg.grid_mode} "
+              f"(xla schedule: {cfg.attn_schedule_resolved})")
     params = init(jax.random.PRNGKey(0), cfg)
     server = Server(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,

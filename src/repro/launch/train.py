@@ -218,10 +218,19 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--smoke", action="store_true",
                     help="use the arch's reduced smoke config")
+    ap.add_argument("--grid-lowering", default="",
+                    choices=("", "closed_form", "prefetch_lut", "bounding",
+                             "compact"),
+                    help="GridPlan lowering for the attention block "
+                         "domain (default: the arch's attn_schedule)")
     args = ap.parse_args()
 
     from repro.configs import get_config
     cfg = get_config(args.arch, smoke=True if args.smoke else None)
+    if args.grid_lowering:
+        cfg = cfg.replace(grid_lowering=args.grid_lowering)
+        print(f"grid lowering: {cfg.grid_mode} "
+              f"(xla schedule: {cfg.attn_schedule_resolved})")
 
     tcfg = TrainConfig(
         steps=args.steps, grad_accum=args.grad_accum,

@@ -10,15 +10,21 @@ Three execution strategies, selected by sequence length and config:
                    (memory O(S * chunk) instead of O(S^2))
 * ``decode``    -- one-token query against a long KV cache
 
-The flash path has two *schedules*, the XLA-level mirror of the paper's
-two grid modes:
+The flash path has two *schedules*, the XLA-level mirror of the
+GridPlan lowerings (``repro.core.plan``):
 
 * ``dense``      -- every (q, k-chunk) pair is computed and masked: the
                     bounding-box analogue (2x wasted FLOPs for causal).
-* ``triangular`` -- a static python loop over q chunks; chunk i only
-                    touches k[: (i+1)*chunk]: the compact block-space
+* ``triangular`` -- a static python loop over q chunks whose per-row
+                    k-extents come from the block domain via
+                    ``GridPlan.row_extents()``: the compact block-space
                     analogue (exactly the paper's Theorem-2 work saving
                     applied to the 2-simplex domain of causal attention).
+
+``schedule`` also accepts GridPlan lowering names ("closed_form",
+"prefetch_lut", "bounding", "compact"), mapped through
+``plan.xla_schedule`` -- the launch configs plumb one lowering knob to
+both the Pallas kernels and this XLA path.
 
 GQA is handled by grouping q heads as (Hkv, G) so K/V are never
 materialized per-q-head.
@@ -32,7 +38,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.domain import make_attention_domain
+from repro.core.plan import GridPlan, xla_schedule
+
 NEG_INF = float(-1e30)
+
+
+def _schedule_name(schedule: str) -> str:
+    """Normalize: accept schedules and GridPlan lowering names."""
+    if schedule in ("dense", "triangular"):
+        return schedule
+    return xla_schedule(schedule)
 
 
 def _mask(qpos, kpos, kind: str, window: int):
@@ -153,13 +169,35 @@ def _chunk_bwd_scan(qg, k, v, o, lse, dog, kind, window, scale, chunk,
 
 def _tri_klen(i: int, chunk: int, sk: int, sq: int, kind: str,
               window: int) -> tuple[int, int]:
-    """Static (k_start, k_len) for q chunk i under the compact schedule."""
+    """Static (k_start, k_len) for q chunk i under the compact schedule
+    with a q/k offset (cross-attention-style sk > sq)."""
     hi = min(sk, (i + 1) * chunk + (sk - sq))
     if kind == "local":
         lo = max(0, (i * chunk + (sk - sq) - window) // chunk * chunk)
     else:
         lo = 0
     return lo, hi - lo
+
+
+@functools.lru_cache(maxsize=256)
+def _compact_extents(kind: str, window: int, chunk: int, sq: int,
+                     sk: int) -> tuple:
+    """Static per-q-chunk (k_start, k_len) for the compact schedule.
+
+    For the square self-attention case the extents come from the block
+    domain itself (``GridPlan.row_extents``), so any domain the engine
+    registers schedules correctly; the offset case (sk > sq) keeps the
+    token-level closed form.  Cached: re-entered on every fwd AND bwd
+    trace of the custom-vjp flash."""
+    m_q = sq // chunk
+    if sq != sk:
+        return tuple(_tri_klen(i, chunk, sk, sq, kind, window)
+                     for i in range(m_q))
+    wb = (-(-window // chunk) + 1) if kind == "local" else 0
+    domain = make_attention_domain(kind, m_q, m_q, wb)
+    ext = GridPlan(domain).row_extents()
+    return tuple((int(lo) * chunk, (int(hi) + 1 - int(lo)) * chunk)
+                 for lo, hi in ext)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
@@ -179,9 +217,10 @@ def _flash_fwd_impl(q, k, v, kind, window, scale, chunk, schedule):
                                  q_offset)
     else:  # triangular / band compact schedule: static loop over q chunks
         nq = sq // chunk
+        extents = _compact_extents(kind, window, chunk, sq, sk)
         os_, lses = [], []
         for i in range(nq):
-            lo, ln = _tri_klen(i, chunk, sk, sq, kind, window)
+            lo, ln = extents[i]
             qi = qg[:, :, :, i * chunk:(i + 1) * chunk]
             oi, lsei = _chunk_fwd_scan(
                 qi, k[:, :, lo:lo + ln], v[:, :, lo:lo + ln], kind, window,
@@ -213,11 +252,12 @@ def _flash_vjp_bwd(kind, window, scale, chunk, schedule, res, do):
                                      scale, chunk, q_offset)
     else:
         nq = sq // chunk
+        extents = _compact_extents(kind, window, chunk, sq, sk)
         dq = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
         dk = jnp.zeros((b, hkv, sk, d), jnp.float32)
         dv = jnp.zeros((b, hkv, sk, dvd), jnp.float32)
         for i in range(nq):
-            lo, ln = _tri_klen(i, chunk, sk, sq, kind, window)
+            lo, ln = extents[i]
             sl = slice(i * chunk, (i + 1) * chunk)
             dqi, dki, dvi = _chunk_bwd_scan(
                 qg[:, :, :, sl], k[:, :, lo:lo + ln], v[:, :, lo:lo + ln],
@@ -237,6 +277,7 @@ _flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
 def flash_attention_xla(q, k, v, *, kind="causal", window=0,
                         scale: Optional[float] = None, chunk=1024,
                         schedule="dense"):
+    schedule = _schedule_name(schedule)
     if scale is None:
         scale = float(1.0 / np.sqrt(q.shape[-1]))
     chunk = min(chunk, k.shape[2])
@@ -279,6 +320,8 @@ def decode_attention(q, k, v, pos, *, kind="causal", window=0,
 
 def attention(q, k, v, *, kind="causal", window=0, scale=None,
               chunk=1024, schedule="dense", flash_threshold=8192):
+    """schedule: "dense" | "triangular", or any GridPlan lowering name
+    ("closed_form" | "prefetch_lut" | "bounding" | "compact")."""
     sq, sk = q.shape[2], k.shape[2]
     if sq == 1:
         raise ValueError("use decode_attention for single-token queries")

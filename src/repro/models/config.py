@@ -71,6 +71,12 @@ class ModelConfig:
     norm_eps: float = 1e-6
     attn_chunk: int = 1024          # kv-chunk for the flash path
     attn_schedule: str = "dense"    # dense (bounding-box) | triangular (compact)
+    # GridPlan lowering knob (repro.core.plan): "closed_form" |
+    # "prefetch_lut" | "bounding" | "" (= derive from attn_schedule).
+    # When set it wins over attn_schedule for the XLA flash path; call
+    # sites that invoke the Pallas kernels directly read it as
+    # grid_mode via the accessor below.
+    grid_lowering: str = ""
     flash_threshold: int = 8192     # use flash custom-vjp above this seq len
     remat: bool = True
     logit_chunk: int = 0            # 0 = unchunked cross-entropy
@@ -101,6 +107,21 @@ class ModelConfig:
     @property
     def ssd_heads(self) -> int:
         return self.d_inner // self.ssd_head_dim
+
+    @property
+    def attn_schedule_resolved(self) -> str:
+        """The XLA flash schedule, honoring grid_lowering when set."""
+        if self.grid_lowering:
+            from repro.core.plan import xla_schedule
+            return xla_schedule(self.grid_lowering)
+        return self.attn_schedule
+
+    @property
+    def grid_mode(self) -> str:
+        """grid_mode for call sites that invoke repro.kernels.ops
+        directly (the model stack itself routes through the XLA path
+        via attn_schedule_resolved)."""
+        return self.grid_lowering or "closed_form"
 
     def attn_kind(self, layer: int) -> str:
         return self.attn_pattern[layer % len(self.attn_pattern)]

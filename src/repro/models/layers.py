@@ -128,7 +128,7 @@ def attn_block(params, x, cfg, kind, positions):
     o = attn_lib.attention(
         q, k, v, kind=("local" if kind == "local" else "causal"),
         window=cfg.local_window, chunk=cfg.attn_chunk,
-        schedule=cfg.attn_schedule, flash_threshold=cfg.flash_threshold)
+        schedule=cfg.attn_schedule_resolved, flash_threshold=cfg.flash_threshold)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
     return o @ params["wo"].astype(x.dtype)
 
@@ -142,7 +142,7 @@ def attn_block_prefill(params, x, cfg, kind, positions):
     o = attn_lib.attention(
         q, k, v, kind=("local" if kind == "local" else "causal"),
         window=cfg.local_window, chunk=cfg.attn_chunk,
-        schedule=cfg.attn_schedule, flash_threshold=cfg.flash_threshold)
+        schedule=cfg.attn_schedule_resolved, flash_threshold=cfg.flash_threshold)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
     return o @ params["wo"].astype(x.dtype), (k, v)
 

@@ -76,7 +76,7 @@ def mla_block(p, x, cfg, positions, *, return_cache=False):
 
     o = attn_lib.attention(
         q, k, v, kind="causal", scale=1.0 / np.sqrt(dn + dr),
-        chunk=cfg.attn_chunk, schedule=cfg.attn_schedule,
+        chunk=cfg.attn_chunk, schedule=cfg.attn_schedule_resolved,
         flash_threshold=cfg.flash_threshold)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
     out = o @ p["wo"].astype(x.dtype)

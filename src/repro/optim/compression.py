@@ -63,7 +63,9 @@ def compressed_psum_grads(grads, residual, axis_names):
         total = jax.lax.psum(deq, axis_names)
         n = 1
         for a in axis_names:
-            n *= jax.lax.axis_size(a)
+            # jax.lax.axis_size only exists in newer jax; psum(1, axis)
+            # is the portable way to read a mapped axis size
+            n *= jax.lax.psum(1, a)
         return (total / n).astype(g.dtype), new_r
 
     flat_g, tree = jax.tree.flatten(grads)

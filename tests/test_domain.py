@@ -1,8 +1,7 @@
 """Tests for the block-space domain abstraction (repro.core.domain)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import fractal as F
 from repro.core.domain import (BandDomain, BoundingBoxDomain,
