@@ -1,18 +1,28 @@
 """CA application benchmark: one nearest-neighbour step on the embedded
-gasket.
+gasket, compact vs embedded storage.
 
-Two XLA-measurable strategies (the Pallas kernels target TPU and are
-validated separately):
+Three strategies:
 
-  * embedded: roll-based stencil over the full n x n matrix (bounding
-    box work, n^2);
-  * packed:   the beyond-paper optimization from DESIGN.md -- state
-    stored in the compact orthotope layout (Lemma 2) with precomputed
-    lambda neighbour index tables; touches only the n^H live cells at
-    the cost of gathers.
+  * embedded: roll-based XLA stencil over the full n x n matrix
+    (bounding box memory and work, n^2) -- skipped above
+    ``--embedded-max-r`` where the dense buffers stop fitting the
+    memory budget;
+  * packed:   state stored in the compact linear-lambda layout with
+    host-built lambda^-1 neighbour index tables
+    (``repro.core.compact.cell_neighbor_tables``, sort-based: no dense
+    scratch even at build time); touches only the n^H live cells, so it
+    runs at n = 2^14..2^16 where the embedded array cannot be
+    allocated;
+  * kernel:   the Pallas ``ca_step`` storage A/B (embedded vs
+    orthotope-resident compact blocks) at moderate n -- interpret mode
+    on CPU, compiled Mosaic on TPU.
+
+Each row reports the bytes the step must move (state read + write) next
+to the time.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 
 import jax
@@ -20,27 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fractal as F
-from repro.kernels import ref
+from repro.core.compact import CompactLayout, cell_neighbor_tables
+from repro.core.domain import make_fractal_domain
+from repro.kernels import ops, ref
 from .common import row, time_fn
 
-
-def packed_neighbor_tables(r: int):
-    """For each of the 3^r cells (in linear lambda order) the packed index
-    of its N/S/W/E neighbour, or 3^r (a zero ghost slot) if absent."""
-    n = 2 ** r
-    i = np.arange(3 ** r)
-    lx, ly = F.lambda_map_linear(i, r)
-    # embedded coord -> packed index lookup
-    emb_to_packed = np.full((n, n), 3 ** r, dtype=np.int64)
-    emb_to_packed[ly, lx] = i
-    tables = []
-    for dx, dy in ((0, -1), (0, 1), (-1, 0), (1, 0)):
-        x, y = lx + dx, ly + dy
-        ok = (x >= 0) & (x < n) & (y >= 0) & (y < n)
-        t = np.where(ok, emb_to_packed[np.clip(y, 0, n - 1),
-                                       np.clip(x, 0, n - 1)], 3 ** r)
-        tables.append(t)
-    return jnp.asarray(np.stack(tables))  # (4, 3^r)
+# keep the dense path under ~0.5 GiB of f32 buffers by default
+EMBEDDED_MAX_R = 12
 
 
 @jax.jit
@@ -55,33 +51,85 @@ def embedded_parity_step(state, n):
     return ref.ca_step_ref(state, "parity")
 
 
-def run():
-    print("# CA step: embedded n^2 stencil vs packed n^H gather")
-    for r in range(6, 12):
-        n = 2 ** r
+def run_kernel_storage_ab(iters: int = 5):
+    """Pallas ca_step: embedded vs orthotope-resident compact storage."""
+    print("# Pallas ca_step storage A/B (embedded n^2 vs compact n^H blocks)")
+    for n, block in ((64, 8), (128, 8), (256, 16)):
         mask = F.membership_grid(n)
         rng = np.random.default_rng(0)
-        s_emb = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
-                            .astype(np.float32))
-        t_emb = time_fn(embedded_parity_step, s_emb, n, iters=10)
+        s = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                        .astype(np.float32))
+        z = jnp.zeros_like(s)
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        sp, zp = lay.pack(s, block), lay.pack(z, block)
+        b_emb = 2 * 4 * n * n
+        b_pk = 2 * 4 * lay.num_cells(block)
+        t_emb = time_fn(functools.partial(
+            ops.ca_step, rule="parity", block=block), s, z,
+            warmup=2, iters=iters)
+        t_pk = time_fn(functools.partial(
+            ops.ca_step, rule="parity", block=block, storage="compact",
+            n=n), sp, zp, warmup=2, iters=iters)
+        row(f"ca_kernel/embedded/n={n}/rho={block}", t_emb,
+            f"bytes={b_emb}")
+        row(f"ca_kernel/compact/n={n}/rho={block}", t_pk,
+            f"bytes={b_pk};bytes_saved={1 - b_pk / b_emb:.3f};"
+            f"speedup={t_emb / t_pk:.2f}")
 
-        tables = packed_neighbor_tables(r)
-        i = np.arange(3 ** r)
-        lx, ly = F.lambda_map_linear(i, r)
-        lx, ly = np.asarray(lx), np.asarray(ly)
-        s_pack = jnp.asarray(np.asarray(s_emb)[ly, lx])  # linear lambda order
-        t_pack = time_fn(packed_parity_step, s_pack, tables, iters=10)
 
-        # correctness cross-check
-        want = ref.ca_step_ref(s_emb, "parity")
-        got_packed = packed_parity_step(s_pack, tables)
-        want_packed = np.asarray(want)[ly, lx]
-        assert np.array_equal(np.asarray(got_packed), want_packed), r
+def run(max_r: int = 11, storage: str = "both",
+        embedded_max_r: int = EMBEDDED_MAX_R, kernel_ab: bool = True):
+    if kernel_ab:
+        run_kernel_storage_ab()
+    print("# CA step: embedded n^2 stencil vs packed n^H gather (XLA)")
+    for r in range(6, max_r + 1):
+        n = 2 ** r
+        t_emb = None
+        if storage in ("both", "embedded"):
+            if r > embedded_max_r:
+                row(f"ca_embedded/n={n}", 0.0,
+                    f"skipped=embedded {4 * n * n} B state over budget")
+            else:
+                mask = F.membership_grid(n)
+                rng = np.random.default_rng(0)
+                s_emb = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                                    .astype(np.float32))
+                t_emb = time_fn(embedded_parity_step, s_emb, n, iters=10)
+                row(f"ca_embedded/n={n}", t_emb,
+                    f"cells={n * n};bytes={2 * 4 * n * n}")
+        if storage in ("both", "compact"):
+            vol = 3 ** r
+            tables = jnp.asarray(cell_neighbor_tables(r))
+            rng = np.random.default_rng(0)
+            s_pack = jnp.asarray(rng.integers(0, 2, vol).astype(np.float32))
+            t_pack = time_fn(packed_parity_step, s_pack, tables, iters=10)
+            derived = f"cells={vol};bytes={2 * 4 * vol}"
+            if t_emb is not None:
+                derived += f";speedup={t_emb / t_pack:.2f}"
+                # correctness cross-check against the embedded oracle
+                i = np.arange(vol)
+                lx, ly = F.lambda_map_linear(i, r)
+                lx, ly = np.asarray(lx), np.asarray(ly)
+                s_cmp = jnp.asarray(np.asarray(s_emb)[ly, lx])
+                want = np.asarray(ref.ca_step_ref(s_emb, "parity"))[ly, lx]
+                got = np.asarray(packed_parity_step(s_cmp, tables))
+                assert np.array_equal(got, want), r
+            row(f"ca_packed/n={n}", t_pack, derived)
 
-        row(f"ca_embedded/n={n}", t_emb, f"cells={n * n}")
-        row(f"ca_packed/n={n}", t_pack,
-            f"cells={3 ** r};speedup={t_emb / t_pack:.2f}")
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--storage", default="both",
+                    choices=["both", "embedded", "compact"])
+    ap.add_argument("--max-r", type=int, default=11)
+    ap.add_argument("--embedded-max-r", type=int, default=EMBEDDED_MAX_R)
+    ap.add_argument("--no-kernel-ab", action="store_true")
+    args = ap.parse_args()
+    run(max_r=args.max_r, storage=args.storage,
+        embedded_max_r=args.embedded_max_r,
+        kernel_ab=not args.no_kernel_ab)
 
 
 if __name__ == "__main__":
-    run()
+    main()

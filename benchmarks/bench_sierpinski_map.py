@@ -92,8 +92,37 @@ def run_lowering_ab(iters: int = 5):
                     f"speedup_vs_closed_form={t_closed / t:.2f}")
 
 
+def run_storage_ab(iters: int = 5):
+    """Compact-vs-embedded *storage* A/B on the Pallas write kernel: the
+    same compact grid, with the state array either the dense n x n
+    matrix or the packed Lemma 2 orthotope; reports bytes the write
+    touches next to the time."""
+    from repro.core.compact import CompactLayout
+    from repro.core.domain import make_fractal_domain
+    print("# storage A/B (Pallas write kernel): embedded n^2 array vs")
+    print("#   compact orthotope-resident (Lemma 2) state")
+    for n, rho in ((64, 8), (256, 16), (512, 32)):
+        m = jnp.zeros((n, n), jnp.float32)
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // rho))
+        mp = jnp.zeros(lay.array_shape(rho), jnp.float32)
+        t_emb = time_fn(functools.partial(
+            ops.sierpinski_write, value=7.0, block=rho), m,
+            warmup=2, iters=iters)
+        t_pk = time_fn(functools.partial(
+            ops.sierpinski_write, value=7.0, block=rho,
+            storage="compact", n=n), mp, warmup=2, iters=iters)
+        b_emb, b_pk = 4 * n * n, 4 * lay.num_cells(rho)
+        row(f"write_storage/embedded/n={n}/rho={rho}", t_emb,
+            f"bytes={b_emb}")
+        row(f"write_storage/compact/n={n}/rho={rho}", t_pk,
+            f"bytes={b_pk};bytes_saved={1 - b_pk / b_emb:.3f};"
+            f"speedup={t_emb / t_pk:.2f}")
+
+
 def run(max_r: int = 11):
     run_lowering_ab()
+    run_storage_ab()
     print("# paper Fig.8 analogue: lambda vs bounding-box write, CPU/XLA")
     print("# lam_scatter = embedded-layout scatter (CPU-hostile, kept as")
     print("# the documented negative result); lam_packed = compact layout")

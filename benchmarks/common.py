@@ -1,10 +1,16 @@
 """Shared timing utilities for the benchmark harness."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
+
+#: every row() call is also collected here so harness entry points can
+#: dump a machine-readable artifact next to the CSV stdout (CI uploads
+#: benchmarks/*.json)
+RESULTS: list = []
 
 
 def time_fn(fn, *args, warmup: int = 3, iters: int = 20,
@@ -25,4 +31,13 @@ def time_fn(fn, *args, warmup: int = 3, iters: int = 20,
 
 
 def row(name: str, us: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": round(us, 2),
+                    "derived": derived})
     print(f"{name},{us:.2f},{derived}")
+
+
+def dump_json(path: str):
+    """Write every row() recorded so far to ``path`` as a JSON list."""
+    with open(path, "w") as f:
+        json.dump(RESULTS, f, indent=1)
+    print(f"# wrote {len(RESULTS)} rows to {path}")

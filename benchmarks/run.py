@@ -1,4 +1,5 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV;
+# optionally mirror the rows to a JSON artifact with --json.
 import argparse
 
 
@@ -6,11 +7,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: map,space,time,ca,attn")
+    ap.add_argument("--json", default=None,
+                    help="also write all rows to this JSON file")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_attention_domains, bench_ca, bench_map_time,
-                   bench_sierpinski_map, bench_space_efficiency)
+                   bench_sierpinski_map, bench_space_efficiency, common)
 
     print("name,us_per_call,derived")
     if only is None or "map" in only:
@@ -23,6 +26,8 @@ def main() -> None:
         bench_ca.run()
     if only is None or "attn" in only:
         bench_attention_domains.run()
+    if args.json:
+        common.dump_json(args.json)
 
 
 if __name__ == '__main__':

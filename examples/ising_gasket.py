@@ -2,11 +2,15 @@
 application from the paper's introduction (Gefen et al., phase
 transitions on fractals).
 
-Checkerboard Metropolis sweeps over the embedded gasket: neighbour sums
-come from the block-space diffusion kernel machinery; the compact
-lambda enumeration gives the n^H active sites.  The gasket famously has
-NO finite-temperature phase transition (H < 2): magnetization decays at
-every T > 0, which the demo shows qualitatively.
+Checkerboard Metropolis sweeps over the gasket, **orthotope-resident**:
+spins live in the compact linear-lambda layout (exactly n^H = 3^r
+sites), neighbour sums are gathers through the host-built
+lambda^-1-resolved cell neighbour tables, and the checkerboard parity
+comes from the embedded coordinates of each packed site.  No n x n
+array exists at any point, so r is bounded by 3^r sites -- not by the
+2^(2r) embedded grid.  The gasket famously has NO finite-temperature
+phase transition (H < 2): magnetization decays at every T > 0, which
+the demo shows qualitatively.
 
 Run:  PYTHONPATH=src python examples/ising_gasket.py [--sweeps 50]
 """
@@ -17,27 +21,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fractal as F
+from repro.core.compact import cell_neighbor_tables
 
 
-def neighbor_sum(s):
-    up = jnp.roll(s, 1, 0).at[0, :].set(0)
-    down = jnp.roll(s, -1, 0).at[-1, :].set(0)
-    left = jnp.roll(s, 1, 1).at[:, 0].set(0)
-    right = jnp.roll(s, -1, 1).at[:, -1].set(0)
-    return up + down + left + right
+def packed_neighbor_sum(s, tables):
+    """Sum of the 4 embedded neighbours of each packed site (ghost
+    slot 3^r reads the appended 0)."""
+    z = jnp.concatenate([s, jnp.zeros((1,), s.dtype)])
+    return z[tables[0]] + z[tables[1]] + z[tables[2]] + z[tables[3]]
 
 
-def metropolis_sweep(key, spins, mask, beta):
-    """Two checkerboard half-sweeps (parallel Metropolis)."""
-    n = spins.shape[0]
-    yy, xx = jnp.mgrid[0:n, 0:n]
+def metropolis_sweep(key, spins, parity_bits, tables, beta):
+    """Two checkerboard half-sweeps (parallel Metropolis) on the packed
+    spin vector."""
     for parity in (0, 1):
         key, sub = jax.random.split(key)
-        nb = neighbor_sum(spins)
+        nb = packed_neighbor_sum(spins, tables)
         dE = 2.0 * spins * nb
         accept = (jax.random.uniform(sub, spins.shape)
                   < jnp.exp(-beta * dE))
-        flip = accept & mask & (((xx + yy) % 2) == parity)
+        flip = accept & (parity_bits == parity)
         spins = jnp.where(flip, -spins, spins)
     return key, spins
 
@@ -48,19 +51,27 @@ def main():
     ap.add_argument("--sweeps", type=int, default=50)
     ap.add_argument("--betas", default="1.0,0.5,0.2")
     args = ap.parse_args()
-    n = 2 ** args.r
-    mask = jnp.asarray(F.membership_grid(n))
+    r = args.r
+    n = 2 ** r
     n_sites = F.gasket_volume(n)
-    print(f"gasket n={n}, sites={n_sites} (n^{F.HAUSDORFF:.3f})")
+    print(f"gasket n={n}, sites={n_sites} (n^{F.HAUSDORFF:.3f}), "
+          f"packed {4 * n_sites} B f32 vs embedded {4 * n * n} B")
 
-    sweep = jax.jit(metropolis_sweep, static_argnums=())
+    tables = jnp.asarray(cell_neighbor_tables(r))
+    i = np.arange(n_sites)
+    lx, ly = F.lambda_map_linear(i, r)
+    parity_bits = jnp.asarray((np.asarray(lx) + np.asarray(ly)) % 2,
+                              jnp.int32)
+
+    sweep = jax.jit(metropolis_sweep)
     for beta in [float(b) for b in args.betas.split(",")]:
         key = jax.random.PRNGKey(0)
-        spins = jnp.where(mask, 1.0, 0.0)   # cold start, all up
+        spins = jnp.ones((n_sites,), jnp.float32)   # cold start, all up
         for _ in range(args.sweeps):
-            key, spins = sweep(key, spins, mask, beta)
+            key, spins = sweep(key, spins, parity_bits, tables, beta)
         mag = float(jnp.abs(jnp.sum(spins)) / n_sites)
-        energy = float(-jnp.sum(spins * neighbor_sum(spins)) / 2 / n_sites)
+        energy = float(-jnp.sum(spins * packed_neighbor_sum(spins, tables))
+                       / 2 / n_sites)
         print(f"beta={beta:4.2f}:  |m| = {mag:.4f}   E/site = {energy:.4f}")
     print("note: magnetization decays for every beta -- the gasket has no "
           "finite-T transition (H < 2)")

@@ -1,16 +1,21 @@
 # The paper's primary contribution: the block-space fractal map lambda(w)
 # and its generalization to block-structured sparse compute domains,
 # plus the GridPlan execution engine that lowers any domain to a Pallas
-# grid via closed-form, scalar-prefetch-LUT, or bounding-box strategies.
-from . import domain, fractal, plan
+# grid via closed-form, scalar-prefetch-LUT, or bounding-box strategies,
+# with state either embedded (O(n^2)) or orthotope-resident (O(n^H),
+# CompactLayout).
+from . import compact, domain, fractal, plan
+from .compact import (NEIGHBOR_OFFSETS, CompactLayout, cell_neighbor_tables,
+                      key_block_support, pack_kv)
 from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
                      GeneralizedFractalDomain, SierpinskiDomain,
                      TriangularDomain, make_attention_domain,
                      make_fractal_domain)
 from .fractal import (CARPET, FRACTALS, HAUSDORFF, SIERPINSKI, VICSEK,
-                      FractalSpec, all_block_coords, gasket_volume,
-                      is_member, lambda_inverse, lambda_map,
+                      FractalSpec, all_block_coords, deinterleave_linear,
+                      gasket_volume, is_member, lambda_inverse, lambda_map,
                       lambda_map_linear, membership_grid, orthotope_shape,
                       pack_to_orthotope, scale_level, unpack_from_orthotope)
-from .plan import (LOWERINGS, BlockCoords, GridPlan, normalize_lowering,
+from .plan import (LOWERINGS, STORAGES, BlockCoords, GridPlan,
+                   normalize_lowering, normalize_storage,
                    registered_domains, xla_schedule)

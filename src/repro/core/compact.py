@@ -1,0 +1,284 @@
+"""Compact n^H storage: fractal (and general block-domain) state resident
+in the packed orthotope layout of Lemma 2.
+
+Every kernel in this repo used to *store* the fractal in the dense
+embedded n x n array, so memory stayed O(n^2) even though the paper's
+lambda(w) map launches only O(n^H) parallel work.  A
+:class:`CompactLayout` moves the data itself into the compact layout:
+
+* fractal domains pack block-for-block into the Lemma 2 orthotope
+  (``k**ceil(r/2) x k**floor(r/2)`` blocks, k = 3 for the gasket) using
+  the alternating base-k digit addressing of ``lambda``/``lambda^-1``;
+* every other block domain packs block-linearly (slot ``i`` of the
+  domain's canonical enumeration at row-major position ``i`` of a
+  near-square grid), so triangular / band / bounding-box state can be
+  orthotope-resident too.
+
+The layout answers three questions:
+
+* ``slot(bx, by)``         -- which packed block holds embedded block
+                              (bx, by)  (traceable scalar int math, so it
+                              runs inside ``BlockSpec.index_map``);
+* ``pack`` / ``unpack``    -- host/jit bridges between the embedded and
+                              packed arrays (reusing ``lambda_map`` /
+                              ``lambda_inverse`` for fractals);
+* ``neighbor_slots_host`` -- per compact block, the compact slots of its
+                              N/S/W/E *embedded* neighbours (the
+                              lambda^-1-resolved halo addressing a CA
+                              stencil needs), built host-side and shipped
+                              through GridPlan's ``prefetch_lut`` path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fractal as F
+from .domain import (BlockDomain, GeneralizedFractalDomain,
+                     SierpinskiDomain)
+
+#: halo order shared by the layout tables, the GridPlan neighbour specs
+#: and the CA kernel: north, south, west, east (dx, dy).
+NEIGHBOR_OFFSETS = ((0, -1), (0, 1), (-1, 0), (1, 0))
+
+
+def _is_host(x) -> bool:
+    return isinstance(x, (int, np.integer, np.ndarray))
+
+
+def _clip(x, lo, hi):
+    if _is_host(x):
+        return np.clip(x, lo, hi)
+    return jnp.clip(x, lo, hi)
+
+
+class CompactLayout:
+    """Packed storage layout for a :class:`BlockDomain`'s member blocks.
+
+    The packed array holds ``num_slots >= num_blocks`` blocks arranged as
+    a 2-D grid of ``grid_shape = (scols, srows)`` blocks; member block
+    ``i`` of the domain's canonical enumeration lives at ``slot_linear(i)``.
+    For fractal domains this is exactly the Lemma 2 orthotope
+    (``num_slots == num_blocks``); generic domains get a near-square
+    row-major grid with at most ``scols - 1`` unused pad slots.
+    """
+
+    def __init__(self, domain: BlockDomain):
+        self.domain = domain
+        spec = self._fractal_spec()
+        if spec is not None:
+            self._k, self._r = spec.k, domain.r_b
+            self.grid_shape = spec.orthotope_shape(domain.r_b)
+        else:
+            self._k = self._r = None
+            n = domain.num_blocks
+            scols = max(1, math.isqrt(n))
+            if scols * scols < n:
+                scols += 1
+            srows = -(-n // scols)
+            self.grid_shape = (scols, srows)
+        self._slots_host = None
+        self._neighbors_host = None
+
+    def _fractal_spec(self):
+        if isinstance(self.domain, SierpinskiDomain):
+            return F.SIERPINSKI
+        if isinstance(self.domain, GeneralizedFractalDomain):
+            return self.domain.spec
+        return None
+
+    @property
+    def num_slots(self) -> int:
+        return self.grid_shape[0] * self.grid_shape[1]
+
+    # -- addressing (traceable on host ints, numpy, and traced scalars) -----
+
+    def slot_linear(self, i):
+        """Linear enumeration index -> (sx, sy) packed block coords."""
+        if self._k is not None:
+            return F.deinterleave_linear(i, self._k, self._r)
+        scols = self.grid_shape[0]
+        return i % scols, i // scols
+
+    def slot(self, bx, by):
+        """Embedded block coords -> (sx, sy) packed block coords.
+
+        Non-member coords decode to *some* in-range slot (the kernel
+        discards those steps); members decode to their true slot.
+        """
+        if isinstance(self.domain, SierpinskiDomain):
+            return F.lambda_inverse(bx, by, self._r)
+        spec = self._fractal_spec()
+        if spec is not None:
+            return spec.lambda_inverse(bx, by, self._r)
+        i = _clip(self.domain.linear_index(bx, by), 0,
+                  self.domain.num_blocks - 1)
+        return self.slot_linear(i)
+
+    def neighbor_slot(self, bx, by, dx, dy):
+        """Traceable (sx, sy, valid) of embedded neighbour (bx+dx,
+        by+dy); invalid (out of range / non-member) neighbours point at
+        slot (0, 0) with valid false."""
+        nbx, nby = self.domain.bounding_box
+        x, y = bx + dx, by + dy
+        xc = _clip(x, 0, nbx - 1)
+        yc = _clip(y, 0, nby - 1)
+        ok = (x >= 0) & (x < nbx) & (y >= 0) & (y < nby) \
+            & self.domain.contains(xc, yc)
+        sx, sy = self.slot(xc, yc)
+        where = np.where if _is_host(bx) else jnp.where
+        return where(ok, sx, 0), where(ok, sy, 0), ok
+
+    # -- host tables ---------------------------------------------------------
+
+    def slots_host(self) -> np.ndarray:
+        """(num_blocks, 2) int32 (sx, sy) per canonical enumeration index."""
+        if self._slots_host is None:
+            i = np.arange(self.domain.num_blocks, dtype=np.int64)
+            sx, sy = self.slot_linear(i)
+            t = np.stack([np.asarray(sx), np.asarray(sy)], -1)
+            t = t.astype(np.int32)
+            t.setflags(write=False)
+            self._slots_host = t
+        return self._slots_host
+
+    def neighbor_slots_host(self) -> np.ndarray:
+        """(num_blocks, 4, 3) int32: per compact block and N/S/W/E
+        neighbour the (sx, sy, valid) triple; invalid neighbours point at
+        slot (0, 0) with valid = 0.  This is the lambda^-1-resolved halo
+        table the ``prefetch_lut`` lowering ships to the scalar core."""
+        if self._neighbors_host is None:
+            coords = self.domain.coords_host().astype(np.int64)
+            out = np.zeros((len(coords), 4, 3), np.int32)
+            for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS):
+                sx, sy, ok = self.neighbor_slot(coords[:, 0], coords[:, 1],
+                                                dx, dy)
+                out[:, j, 0] = np.asarray(sx)
+                out[:, j, 1] = np.asarray(sy)
+                out[:, j, 2] = np.asarray(ok)
+            out.setflags(write=False)
+            self._neighbors_host = out
+        return self._neighbors_host
+
+    # -- shapes / accounting -------------------------------------------------
+
+    def array_shape(self, block: int, trailing: Tuple[int, ...] = ()):
+        """Cell shape of the packed array for block x block tiles."""
+        scols, srows = self.grid_shape
+        return (srows * block, scols * block) + tuple(trailing)
+
+    def embedded_shape(self, block: int, trailing: Tuple[int, ...] = ()):
+        nbx, nby = self.domain.bounding_box
+        return (nby * block, nbx * block) + tuple(trailing)
+
+    def num_cells(self, block: int) -> int:
+        return self.num_slots * block * block
+
+    def embedded_cells(self, block: int) -> int:
+        nbx, nby = self.domain.bounding_box
+        return nbx * nby * block * block
+
+    # -- pack / unpack bridges ----------------------------------------------
+
+    def pack(self, arr: jnp.ndarray, block: int, fill=0) -> jnp.ndarray:
+        """Gather an embedded (nby*block, nbx*block, ...) array into the
+        packed (srows*block, scols*block, ...) layout."""
+        nbx, nby = self.domain.bounding_box
+        scols, srows = self.grid_shape
+        arr = jnp.asarray(arr)
+        trailing = arr.shape[2:]
+        if arr.shape[:2] != (nby * block, nbx * block):
+            raise ValueError(
+                f"embedded array shape {arr.shape[:2]} does not match the "
+                f"domain's {nby}x{nbx} grid of {block}x{block} blocks")
+        blocks = jnp.moveaxis(
+            arr.reshape((nby, block, nbx, block) + trailing), 1, 2)
+        coords = self.domain.coords_host()
+        slots = self.slots_host()
+        sel = blocks[coords[:, 1], coords[:, 0]]
+        out = jnp.full((srows, scols, block, block) + trailing, fill,
+                       arr.dtype)
+        out = out.at[slots[:, 1], slots[:, 0]].set(sel)
+        return jnp.moveaxis(out, 2, 1).reshape(
+            (srows * block, scols * block) + trailing)
+
+    def unpack(self, packed: jnp.ndarray, block: int, fill=0) -> jnp.ndarray:
+        """Scatter the packed layout back into the embedded array; cells
+        outside the domain's member blocks get ``fill``."""
+        nbx, nby = self.domain.bounding_box
+        scols, srows = self.grid_shape
+        packed = jnp.asarray(packed)
+        trailing = packed.shape[2:]
+        if packed.shape[:2] != (srows * block, scols * block):
+            raise ValueError(
+                f"packed array shape {packed.shape[:2]} does not match "
+                f"the layout's {srows}x{scols} grid of {block}x{block} "
+                f"blocks")
+        blocks = jnp.moveaxis(
+            packed.reshape((srows, block, scols, block) + trailing), 1, 2)
+        coords = self.domain.coords_host()
+        slots = self.slots_host()
+        sel = blocks[slots[:, 1], slots[:, 0]]
+        out = jnp.full((nby, nbx, block, block) + trailing, fill,
+                       packed.dtype)
+        out = out.at[coords[:, 1], coords[:, 0]].set(sel)
+        return jnp.moveaxis(out, 2, 1).reshape(
+            (nby * block, nbx * block) + trailing)
+
+
+# ---------------------------------------------------------------------------
+# Cell-level neighbour tables (block = 1 cell): the XLA gather path used
+# by the CA benchmark and the Ising example at scales where even the
+# dense table *build* cannot afford an n x n scratch array.
+# ---------------------------------------------------------------------------
+
+def cell_neighbor_tables(r: int, spec: F.FractalSpec = F.SIERPINSKI
+                         ) -> np.ndarray:
+    """(4, k**r) int32: for each member cell (linear lambda order) the
+    packed index of its N/S/W/E embedded neighbour, or ``k**r`` (a zero
+    ghost slot) when absent.  Sort-based lookup: O(k^r log k^r) time and
+    O(k^r) memory -- no dense n x n scratch, so it scales to n = 2**16
+    where the embedded grid is unallocatable."""
+    n = spec.m ** r
+    vol = spec.k ** r
+    i = np.arange(vol, dtype=np.int64)
+    lx, ly = spec.lambda_map_linear(i, r)
+    lx, ly = np.asarray(lx, np.int64), np.asarray(ly, np.int64)
+    keys = ly * n + lx
+    order = np.argsort(keys)
+    skeys = keys[order]
+    tables = np.full((4, vol), vol, np.int32)
+    for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS):
+        x, y = lx + dx, ly + dy
+        ok = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+        nk = y * n + x
+        pos = np.clip(np.searchsorted(skeys, nk), 0, vol - 1)
+        hit = ok & (skeys[pos] == nk)
+        tables[j] = np.where(hit, order[pos], vol).astype(np.int32)
+    return tables
+
+
+# ---------------------------------------------------------------------------
+# Compact KV support for the attention kernels: the 1-D analogue of the
+# packing above.  An attention block domain touches key blocks
+# [lo, hi); storing only that support is the sliding-window KV-cache
+# truncation (exact for the rectangular decode-convention BandDomain,
+# identity for causal / full / square-band whose support is all of m_k).
+# ---------------------------------------------------------------------------
+
+def key_block_support(domain: BlockDomain) -> Tuple[int, int]:
+    """[lo, hi) key-block (column) support of an attention block domain."""
+    c = domain.coords_host()
+    if len(c) == 0:
+        return 0, 0
+    return int(c[:, 0].min()), int(c[:, 0].max()) + 1
+
+
+def pack_kv(kv: jnp.ndarray, domain: BlockDomain, block: int) -> jnp.ndarray:
+    """Trim a (..., sk, d) K or V tensor to the domain's key-block
+    support: the compact KV the ``storage='compact'`` flash path reads."""
+    lo, hi = key_block_support(domain)
+    return kv[..., lo * block:hi * block, :]

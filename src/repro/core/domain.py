@@ -42,6 +42,13 @@ class BlockDomain:
         """Linear grid index -> (bx, by); must be jax-traceable int math."""
         raise NotImplementedError
 
+    def linear_index(self, bx, by):
+        """Member block coords -> linear grid index (the inverse of
+        ``block_coords``; traceable int math).  Undefined garbage -- but
+        still in-range after clamping -- for non-member coords; compact
+        storage index maps rely only on the member case."""
+        raise NotImplementedError
+
     def contains(self, bx, by):
         """Membership test in the embedded block space (traceable)."""
         raise NotImplementedError
@@ -98,6 +105,9 @@ class BoundingBoxDomain(BlockDomain):
     def block_coords(self, i):
         return i % self.nbx, i // self.nbx
 
+    def linear_index(self, bx, by):
+        return by * self.nbx + bx
+
     def contains(self, bx, by):
         if self._member is None:
             return (bx == bx)  # all true, shape-following
@@ -123,6 +133,15 @@ class SierpinskiDomain(BlockDomain):
 
     def block_coords(self, i):
         return F.lambda_map_linear(i, self.r_b)
+
+    def linear_index(self, bx, by):
+        # per scale level the base-3 digit is the bit-pair sum
+        # (0,0)->0 (0,1)->1 (1,1)->2; see F.lambda_inverse
+        i = bx * 0
+        for mu in range(1, self.r_b + 1):
+            b = ((bx >> (mu - 1)) & 1) + ((by >> (mu - 1)) & 1)
+            i = i + b * 3 ** (mu - 1)
+        return i
 
     def contains(self, bx, by):
         return F.is_member(bx, by, self.n_b)
@@ -152,6 +171,9 @@ class GeneralizedFractalDomain(BlockDomain):
 
     def block_coords(self, i):
         return self.spec.lambda_map_linear(i, self.r_b)
+
+    def linear_index(self, bx, by):
+        return self.spec.linear_index(bx, by, self.r_b)
 
     def contains(self, bx, by):
         # the coarse block grid is the same fractal at level r_b, so the
@@ -217,36 +239,67 @@ class TriangularDomain(BlockDomain):
             return int(k), int(q)
         return k, q  # (bx=key block, by=query block)
 
+    def linear_index(self, bx, by):
+        return by * (by + 1) // 2 + bx
+
     def contains(self, bx, by):
         return bx <= by
 
 
 class BandDomain(BlockDomain):
     """Sliding-window (local) attention block domain: key block kj in
-    [max(0, qi-w+1), qi] for each query block qi.  Blocks:
-    T(w) + (m-w)*w   vs   bounding box m**2."""
+    [max(0, qi + off - w + 1), qi + off] for each query block qi, with
+    ``off = m_k - m_q`` (queries are the *last* m_q rows of the key
+    grid -- the decode convention; off = 0 is square self-attention).
+
+    Square blocks: T(w) + (m-w)*w vs bounding box m**2.  Rectangular
+    (off > 0) requires off >= w - 1 so every row sees a full window:
+    m*w blocks, and the key-block support shrinks to the *last*
+    m + w - 1 key blocks -- the compact sliding-window KV cache."""
 
     name = "band"
 
-    def __init__(self, m: int, w: int):
-        if w > m:
+    def __init__(self, m: int, w: int, m_k: int = None):
+        if w < 1:
+            raise ValueError(
+                f"band window must be at least 1 block, got w={w}: a "
+                f"0-wide band has no blocks and its decode divides by "
+                f"zero")
+        m_k = m if m_k is None else m_k
+        if m_k < m:
+            raise ValueError(f"band domain needs m_k >= m_q, got "
+                             f"m_k={m_k} < m_q={m}")
+        self.off = m_k - m
+        if self.off == 0 and w > m:
             w = m
-        self.m, self.w = m, w
+        if self.off and self.off < w - 1:
+            raise ValueError(
+                f"rectangular band needs m_k - m_q >= w - 1 (every query "
+                f"row sees a full window), got off={self.off}, w={w}")
+        self.m, self.w, self.m_k = m, w, m_k
         self._tw = w * (w + 1) // 2
+        if self.off == 0 and m * (m + 1) // 2 >= 2 ** 24:
+            raise ValueError("band decode exact only below 2**24 blocks")
 
     @property
     def num_blocks(self) -> int:
+        if self.off:
+            return self.m * self.w
         return self._tw + (self.m - self.w) * self.w
 
     @property
     def bounding_box(self):
-        return (self.m, self.m)
+        return (self.m_k, self.m)
 
     def block_coords(self, i):
         if _is_host(i):
             where, i = np.where, np.asarray(i, np.int64)
         else:
             where, i = jnp.where, jnp.asarray(i, jnp.int32)
+        if self.off:
+            q = i // self.w
+            k = self.off + q - self.w + 1 + i % self.w
+            return k, q
         tw = self._tw
         # triangular head (rows 0..w-1), then dense band rows of width w
         q_tri = (_isqrt(8 * i + 1) - 1) // 2
@@ -262,8 +315,16 @@ class BandDomain(BlockDomain):
         k = where(in_tri, k_tri, k_band)
         return k, q
 
+    def linear_index(self, bx, by):
+        if self.off:
+            return by * self.w + (bx - (self.off + by - self.w + 1))
+        where = np.where if _is_host(bx) else jnp.where
+        return where(by < self.w, by * (by + 1) // 2 + bx,
+                     self._tw + (by - self.w) * self.w
+                     + (bx - (by - self.w + 1)))
+
     def contains(self, bx, by):
-        return (bx <= by) & (bx > by - self.w)
+        return (bx <= by + self.off) & (bx > by + self.off - self.w)
 
 
 def make_fractal_domain(fractal: str, n_b: int) -> BlockDomain:
@@ -281,11 +342,14 @@ def make_fractal_domain(fractal: str, n_b: int) -> BlockDomain:
     return GeneralizedFractalDomain(F.FRACTALS[fractal], n_b)
 
 
-def make_attention_domain(kind: str, m_q: int, m_k: int, window_blocks: int = 0):
+def make_attention_domain(kind: str, m_q: int, m_k: int,
+                          window_blocks: int = None):
     """Factory used by the attention kernels.
 
     kind: "causal" -> TriangularDomain (requires m_q == m_k),
-          "local"  -> BandDomain,
+          "local"  -> BandDomain (``window_blocks`` is REQUIRED and must
+                      be >= 1: a defaulted 0-block window used to build a
+                      degenerate domain whose decode divided by zero),
           "full"   -> BoundingBoxDomain (bidirectional / baseline).
     """
     if kind == "causal":
@@ -293,7 +357,11 @@ def make_attention_domain(kind: str, m_q: int, m_k: int, window_blocks: int = 0)
             raise ValueError("causal triangular domain needs square block grid")
         return TriangularDomain(m_q)
     if kind == "local":
-        return BandDomain(m_q, window_blocks)
+        if window_blocks is None or window_blocks < 1:
+            raise ValueError(
+                f"kind='local' requires window_blocks >= 1, got "
+                f"{window_blocks!r}")
+        return BandDomain(m_q, window_blocks, m_k)
     if kind == "full":
         return BoundingBoxDomain(m_k, m_q)
     raise ValueError(kind)

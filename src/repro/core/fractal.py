@@ -206,6 +206,61 @@ class FractalSpec:
             ly = ly + dy * self.m ** (mu - 1)
         return lx, ly
 
+    def lambda_inverse(self, x, y, r: int):
+        """Inverse map: embedded fractal coords -> orthotope coords.
+
+        Per scale level mu the copy index c is recovered by matching the
+        base-m digit pair of (x, y) against the copy offsets (a select
+        chain, so the same code runs on host ints/numpy and traced); the
+        copy indices are then re-packed into the alternating base-k
+        digits of (w_x, w_y), generalizing the gasket's bit-pair trick.
+        Non-member inputs decode to *some* in-range orthotope coordinate
+        (unmatched digit pairs fall through to copy 0), which is exactly
+        what a clamped compact-storage index map needs.
+        """
+        where = np.where if isinstance(x, (int, np.integer, np.ndarray)) \
+            else jnp.where
+        wx = x * 0
+        wy = y * 0
+        px = x * 0 + 1   # k**(even-digit position)
+        py = y * 0 + 1
+        for mu in range(1, r + 1):
+            p = self.m ** (mu - 1)
+            dx = (x // p) % self.m
+            dy = (y // p) % self.m
+            c = x * 0
+            for j, (ox, oy) in enumerate(self.offsets):
+                c = where((dx == ox) & (dy == oy), j, c)
+            if mu % 2 == 1:
+                wy = wy + c * py
+                py = py * self.k
+            else:
+                wx = wx + c * px
+                px = px * self.k
+        return wx, wy
+
+    def linear_index(self, x, y, r: int):
+        """Embedded fractal coords -> linear index in lambda order (the
+        inverse of :meth:`lambda_map_linear`); copy indices become the
+        base-k digits of i."""
+        where = np.where if isinstance(x, (int, np.integer, np.ndarray)) \
+            else jnp.where
+        i = x * 0
+        for mu in range(1, r + 1):
+            p = self.m ** (mu - 1)
+            dx = (x // p) % self.m
+            dy = (y // p) % self.m
+            c = x * 0
+            for j, (ox, oy) in enumerate(self.offsets):
+                c = where((dx == ox) & (dy == oy), j, c)
+            i = i + c * self.k ** (mu - 1)
+        return i
+
+    def orthotope_shape(self, r: int) -> Tuple[int, int]:
+        """Packing orthotope (width_x, height_y): k**floor(r/2) wide by
+        k**ceil(r/2) tall (Lemma 2 generalized to F^{k,s})."""
+        return self.k ** (r // 2), self.k ** ((r + 1) // 2)
+
     def is_member(self, x, y, n: int):
         """Traceable membership test: (x, y) is in the level-r fractal iff
         every base-m digit pair of (x, y) is one of the copy offsets.
@@ -258,6 +313,28 @@ VICSEK = FractalSpec("vicsek-cross", k=5, m=3,
                      offsets=((1, 0), (0, 1), (1, 1), (2, 1), (1, 2)))
 
 FRACTALS = {f.name: f for f in (SIERPINSKI, CARPET, VICSEK)}
+
+
+def deinterleave_linear(i, k: int, r: int):
+    """Linear lambda-order index -> orthotope coords (w_x, w_y).
+
+    The base-k digit stream of i is the alternating digit unrolling of
+    (w_y, w_x) (odd scale levels mu = 1, 3, ... are digits of w_y, even
+    of w_x), so de-interleaving i's digits recovers the Lemma 2 packing
+    coordinate without going through embedded space."""
+    wx = i * 0
+    wy = i * 0
+    px = i * 0 + 1
+    py = i * 0 + 1
+    for mu in range(1, r + 1):
+        d = (i // k ** (mu - 1)) % k
+        if mu % 2 == 1:
+            wy = wy + d * py
+            py = py * k
+        else:
+            wx = wx + d * px
+            px = px * k
+    return wx, wy
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,13 @@ from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
 LOWERINGS = ("closed_form", "prefetch_lut", "bounding")
 _ALIASES = {"compact": "closed_form"}
 
+STORAGES = ("embedded", "compact")
+
+#: LUT column layout under ``storage="compact"``: the embedded block
+#: coords, the block's own packed slot, then per N/S/W/E neighbour the
+#: (sx, sy, valid) triple from CompactLayout.neighbor_slots_host().
+_LUT_BX, _LUT_BY, _LUT_SX, _LUT_SY, _LUT_NBR = 0, 1, 2, 3, 4
+
 
 def normalize_lowering(name: str) -> str:
     """Map user-facing lowering names (incl. legacy aliases) to canonical."""
@@ -67,6 +74,13 @@ def normalize_lowering(name: str) -> str:
         raise ValueError(
             f"unknown lowering {name!r}; expected one of {LOWERINGS} "
             f"or aliases {tuple(_ALIASES)}")
+    return name
+
+
+def normalize_storage(name: str) -> str:
+    if name not in STORAGES:
+        raise ValueError(
+            f"unknown storage {name!r}; expected one of {STORAGES}")
     return name
 
 
@@ -120,13 +134,31 @@ class GridPlan:
                  legacy alias "compact").
     batch_dims:  leading grid dimensions iterated outside the domain
                  (e.g. ``(batch * heads,)`` for attention).
+    storage:     "embedded" (state arrays are the dense bounding-box
+                 layout) or "compact" (state arrays live in the packed
+                 O(n^H) orthotope layout of
+                 :class:`~repro.core.compact.CompactLayout`; the
+                 storage-array index maps emitted by ``storage_spec`` /
+                 ``neighbor_spec`` address packed slots instead of
+                 embedded block coords).
     """
 
     def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
-                 batch_dims: Sequence[int] = ()):
+                 batch_dims: Sequence[int] = (), storage: str = "embedded"):
         self.domain = domain
         self.lowering = normalize_lowering(lowering)
         self.batch_dims = tuple(int(d) for d in batch_dims)
+        self.storage = normalize_storage(storage)
+        self._layout = None
+
+    @property
+    def layout(self):
+        """The domain's :class:`CompactLayout` (built lazily; available
+        under either storage so callers can pack/unpack)."""
+        if self._layout is None:
+            from .compact import CompactLayout
+            self._layout = CompactLayout(self.domain)
+        return self._layout
 
     # -- grid ---------------------------------------------------------------
 
@@ -153,8 +185,20 @@ class GridPlan:
         return 1 if self.lowering == "prefetch_lut" else 0
 
     def lut(self) -> jnp.ndarray:
-        """(num_blocks, 2) i32 host-built coordinate table (bx, by)."""
-        return jnp.asarray(self.domain.coords_host())
+        """Host-built i32 decode table, one row per member block.
+
+        embedded storage: (num_blocks, 2) of (bx, by).
+        compact storage:  (num_blocks, 16): (bx, by, sx, sy) plus the
+        four (sx, sy, valid) neighbour-slot triples, so every compact
+        address resolve -- including the CA halo gathers -- is an O(1)
+        scalar-memory read."""
+        coords = self.domain.coords_host()
+        if self.storage == "embedded":
+            return jnp.asarray(coords)
+        slots = self.layout.slots_host()
+        nbrs = self.layout.neighbor_slots_host().reshape(len(coords), 12)
+        return jnp.asarray(
+            np.concatenate([coords, slots, nbrs], axis=1).astype(np.int32))
 
     # -- the one shared decode ---------------------------------------------
 
@@ -194,6 +238,58 @@ class GridPlan:
     def block_spec(self, block_shape, place: Callable) -> pl.BlockSpec:
         return pl.BlockSpec(block_shape, self.index_map(place))
 
+    # -- storage-array specs (embedded vs compact addressing) ---------------
+
+    def storage_spec(self, block_shape) -> pl.BlockSpec:
+        """BlockSpec for a 2-D state-array operand under this plan's
+        storage: embedded -> block (by, bx) of the bounding-box array;
+        compact -> the packed slot (sy, sx) of the layout.  Under
+        ``prefetch_lut`` the slot is read from the extended LUT; the
+        other lowerings evaluate ``layout.slot`` (lambda^-1) inline."""
+        if self.storage == "embedded":
+            return self.block_spec(block_shape, lambda bx, by: (by, bx))
+        layout = self.layout
+        if self.lowering == "prefetch_lut":
+            def im(*args):
+                *grid_ids, lut_ref = args
+                t = grid_ids[len(self.batch_dims)]
+                return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
+        else:
+            def im(*grid_ids):
+                _, bx, by = self._decode(grid_ids)
+                sx, sy = layout.slot(bx, by)
+                return sy, sx
+        return pl.BlockSpec(block_shape, im)
+
+    def neighbor_spec(self, block_shape, j: int) -> pl.BlockSpec:
+        """BlockSpec for the j-th halo operand (N/S/W/E order of
+        ``compact.NEIGHBOR_OFFSETS``): the embedded neighbour block
+        clamped into range, or -- under compact storage -- its
+        lambda^-1-resolved packed slot (slot (0, 0) for out-of-range /
+        non-member neighbours; the kernel masks those contributions)."""
+        from .compact import NEIGHBOR_OFFSETS
+        dx, dy = NEIGHBOR_OFFSETS[j]
+        if self.storage == "embedded":
+            nbx, nby = self.domain.bounding_box
+
+            def place(bx, by):
+                return (jnp.clip(by + dy, 0, nby - 1),
+                        jnp.clip(bx + dx, 0, nbx - 1))
+            return self.block_spec(block_shape, place)
+        layout = self.layout
+        if self.lowering == "prefetch_lut":
+            def im(*args):
+                *grid_ids, lut_ref = args
+                t = grid_ids[len(self.batch_dims)]
+                return (lut_ref[t, _LUT_NBR + 3 * j + 1],
+                        lut_ref[t, _LUT_NBR + 3 * j])
+        else:
+            def im(*grid_ids):
+                _, bx, by = self._decode(grid_ids)
+                sx, sy, _ok = layout.neighbor_slot(bx, by, dx, dy)
+                return sy, sx
+        return pl.BlockSpec(block_shape, im)
+
     # -- in-kernel accessor -------------------------------------------------
 
     def kernel_coords(self, lut_ref=None) -> BlockCoords:
@@ -221,6 +317,10 @@ class GridPlan:
         table operand under ``prefetch_lut`` (shifting any
         ``input_output_aliases`` accordingly), and selects the plain
         grid vs ``PrefetchScalarGridSpec`` path."""
+        # normalize None-vs-{} once so every lowering sees the same
+        # (possibly shifted) alias dict
+        aliases = {int(i): int(o)
+                   for i, o in (input_output_aliases or {}).items()}
         if self.lowering == "prefetch_lut":
             def wrapped(lut_ref, *refs):
                 kernel(self.kernel_coords(lut_ref), *refs)
@@ -232,13 +332,11 @@ class GridPlan:
                 out_specs=out_specs,
                 scratch_shapes=list(scratch_shapes),
             )
-            aliases = None
-            if input_output_aliases:
-                # operand indices count the prefetch table as input 0
-                aliases = {i + 1: o for i, o in input_output_aliases.items()}
+            # operand indices count the prefetch table as input 0
+            aliases = {i + 1: o for i, o in aliases.items()}
             call = pl.pallas_call(
                 wrapped, grid_spec=grid_spec, out_shape=out_shape,
-                input_output_aliases=aliases or {}, interpret=interpret,
+                input_output_aliases=aliases, interpret=interpret,
                 **kwargs)
             lut = self.lut()
             return lambda *operands: call(lut, *operands)
@@ -250,7 +348,7 @@ class GridPlan:
             wrapped, grid=self.grid, in_specs=list(in_specs),
             out_specs=out_specs, out_shape=out_shape,
             scratch_shapes=list(scratch_shapes),
-            input_output_aliases=input_output_aliases or {},
+            input_output_aliases=aliases,
             interpret=interpret, **kwargs)
         return lambda *operands: call(*operands)
 

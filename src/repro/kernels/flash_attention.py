@@ -21,6 +21,17 @@ softmax state lives in VMEM scratch and the output block is written once
 per row (standard flash revisiting pattern).  GQA folds the kv-head
 index inside the BlockSpec index_map.
 
+Compact KV (the ``storage=`` axis): ``kind="local"`` also accepts
+``sq < sk`` with the decode convention (queries are the last sq
+positions of the key sequence -- chunked prefill / decode against a long
+cache).  The rectangular BandDomain then touches only the *last*
+``sq + window`` key positions, and ``storage="compact"`` reads K/V
+packed to exactly that support (the sliding-window KV-cache truncation:
+O(window) cache instead of O(sk)); the kv BlockSpec index maps are
+rewritten to packed slots.  For causal / full / square-local the column
+support is all of sk, so compact and embedded KV coincide -- the packing
+is the 1-D analogue of the fractal orthotope packing.
+
 Forward only (training uses the custom-vjp jnp path in
 ``repro.models.attention``; this kernel is the serving/TPU fast path).
 """
@@ -34,24 +45,25 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compact import key_block_support
 from repro.core.domain import make_attention_domain
-from repro.core.plan import GridPlan
+from repro.core.plan import GridPlan, normalize_storage
 
 NEG_INF = float(-1e30)  # avoid true -inf so exp() stays nan-free
 
 
-def _row_bounds(kind, qb, m_k, wb):
+def _row_bounds(kind, qb, m_k, wb, off_b):
     if kind == "causal":
         return 0 * qb, qb
     if kind == "local":
-        return jnp.maximum(qb - (wb - 1), 0), qb
+        return jnp.maximum(qb + off_b - (wb - 1), 0), qb + off_b
     return 0 * qb, qb * 0 + (m_k - 1)  # full
 
 
 def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                 *, kind, window, scale, block_q, block_k, m_k, wb):
+                 *, kind, window, scale, block_q, block_k, m_k, wb, off):
     kb, qb = coords.bx, coords.by
-    start, end = _row_bounds(kind, qb, m_k, wb)
+    start, end = _row_bounds(kind, qb, m_k, wb, off // block_q)
 
     def body():
         @pl.when(kb == start)
@@ -67,7 +79,9 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                                 preferred_element_type=jnp.float32)
 
         if kind in ("causal", "local"):
-            qpos = qb * block_q + jax.lax.broadcasted_iota(
+            # decode convention: query row qb covers embedded token
+            # positions off + qb*block_q + [0, block_q)
+            qpos = off + qb * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
             kpos = kb * block_k + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
@@ -98,10 +112,12 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
-    "interpret"))
+    "storage", "kv_seq_len", "interpret"))
 def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     scale: float | None = None, block_q: int = 128,
                     block_k: int = 128, grid_mode: str = "compact",
+                    storage: str = "embedded",
+                    kv_seq_len: int | None = None,
                     interpret: bool | None = None):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
 
@@ -109,15 +125,29 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     grid_mode: "closed_form" (alias "compact": the paper's block-space
                map) | "prefetch_lut" (scalar-prefetch table decode) |
                "bounding" (baseline full grid + run-time discard)
-    causal/local require Sq == Sk (training/prefill self-attention).
+    storage:   "embedded" (k/v hold the full key sequence) | "compact"
+               (k/v hold only the domain's key-block support, packed;
+               see :func:`repro.core.compact.pack_kv`).  When the
+               support is a strict suffix (rectangular local), pass the
+               true key length as ``kv_seq_len``.
+    causal requires Sq == Sk; local accepts Sq < Sk with the decode
+    convention (queries are the last Sq positions) when
+    Sk - Sq >= window (full window per query block).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b, h, sq, d = q.shape
-    _, hkv, sk, _ = k.shape
+    _, hkv, sk_arr, _ = k.shape
     group = h // hkv
     if scale is None:
         scale = float(1.0 / np.sqrt(d))
+    storage = normalize_storage(storage)
+    sk = kv_seq_len if kv_seq_len is not None else sk_arr
+    if kind == "local":
+        # rectangular local (sq < sk) still needs square blocks: clamp
+        # both to one value instead of letting min(.., sq) / min(.., sk)
+        # diverge
+        block_q = block_k = min(block_q, block_k, sq, sk)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     if sq % block_q or sk % block_k:
@@ -125,25 +155,37 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     m_q, m_k = sq // block_q, sk // block_k
 
     wb = 0
+    if kind == "causal" and (sq != sk or block_q != block_k):
+        raise ValueError("causal requires a square block grid")
     if kind == "local":
         if block_q != block_k or window % block_k:
             raise ValueError("local: need block_q == block_k | window")
+        if (sk - sq) % block_k:
+            raise ValueError("local: Sk - Sq must be block-aligned")
         wb = window // block_k + 1
-    if kind in ("causal", "local") and (sq != sk or block_q != block_k):
-        raise ValueError("causal/local require square block grids")
+    off = sk - sq if kind == "local" else 0
 
     domain = make_attention_domain(kind, m_q, m_k, wb)
     plan = GridPlan(domain, grid_mode, batch_dims=(b * h,))
+
+    # compact KV: k/v hold only the key blocks in [s0, m_k)
+    s0 = key_block_support(domain)[0] if storage == "compact" else 0
+    if sk_arr != sk - s0 * block_k:
+        raise ValueError(
+            f"{storage} storage expects k/v of {sk - s0 * block_k} key "
+            f"positions (support blocks [{s0}, {m_k}) of sk={sk}), got "
+            f"{sk_arr}")
 
     def q_place(bx, by, bh):
         return (bh // h, bh % h, by, 0)
 
     def kv_place(bx, by, bh):
-        return (bh // h, (bh % h) // group, bx, 0)
+        kb = jnp.clip(bx - s0, 0, m_k - s0 - 1) if s0 else bx
+        return (bh // h, (bh % h) // group, kb, 0)
 
     kernel = functools.partial(
         _attn_kernel, kind=kind, window=window, scale=scale,
-        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb)
+        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb, off=off)
 
     call = plan.pallas_call(
         kernel,

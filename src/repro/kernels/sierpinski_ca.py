@@ -3,14 +3,20 @@ block-space Pallas kernel (the application class the paper motivates:
 nearest-neighbour data-parallel simulation over the fractal).
 
 Halo exchange: the kernel receives five views of the state array (center
-+ N/S/W/E neighbour tiles) via five BlockSpecs whose index_maps are the
-plan-decoded block coordinate shifted by +-1 (clamped; contributions
-from clamped-out-of-range tiles are masked in-kernel).  All three
-GridPlan lowerings apply: the compact ones visit only member blocks; a
-*stale* buffer (zeros outside the fractal) is aliased to the output so
-unvisited blocks stay zero -- the classic double-buffer CA scheme, which
-is what keeps the compact grids applicable to stencils, not just
-pointwise writes.
++ N/S/W/E neighbour tiles) via five BlockSpecs emitted by the plan.
+Under ``storage="embedded"`` the neighbour index_maps are the decoded
+block coordinate shifted by +-1 (clamped); under ``storage="compact"``
+the state lives in the packed orthotope layout and each neighbour
+index_map resolves the *embedded* neighbour's packed slot through
+lambda^-1 (inline for closed_form / bounding, or as an O(1) read of the
+host-built neighbour-slot table shipped through the scalar-prefetch LUT).
+Out-of-range and non-member neighbour tiles are masked in-kernel.
+
+All three GridPlan lowerings apply: the compact ones visit only member
+blocks; a *stale* buffer (zeros outside the fractal) is aliased to the
+output so unvisited blocks stay zero -- the classic double-buffer CA
+scheme, which is what keeps the compact grids applicable to stencils,
+not just pointwise writes.
 """
 from __future__ import annotations
 
@@ -18,24 +24,35 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from repro.core.domain import make_fractal_domain
+from repro.core.domain import BlockDomain
 from repro.core.plan import GridPlan
-from .sierpinski_write import _cell_mask
+from .sierpinski_write import _cell_mask, resolve_storage_args
 
 
 def _ca_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref,
-               *, rule, alpha, block, n, n_b, domain):
+               *, rule, alpha, block, n, domain):
     bx, by = coords.bx, coords.by
+    nbx, nby = domain.bounding_box
+    nx, ny = nbx * block, nby * block
+
+    def nbr_ok(dx, dy):
+        # halo contributions need the neighbour *block* to be in range
+        # AND a domain member: under compact storage a non-member
+        # neighbour has no slot (its spec was clamped to slot (0, 0)),
+        # and under embedded storage its tile is all zero by the CA
+        # invariant -- the mask makes both storages read identically.
+        x, y = bx + dx, by + dy
+        inr = (x >= 0) & (x < nbx) & (y >= 0) & (y < nby)
+        return inr & domain.contains(jnp.clip(x, 0, nbx - 1),
+                                     jnp.clip(y, 0, nby - 1))
 
     def body():
         c = c_ref[...]
-        # halo rows/cols, zeroed when the neighbour tile is out of range
-        north = jnp.where(by > 0, n_ref[block - 1:block, :], 0)
-        south = jnp.where(by < n_b - 1, s_ref[0:1, :], 0)
-        west = jnp.where(bx > 0, w_ref[:, block - 1:block], 0)
-        east = jnp.where(bx < n_b - 1, e_ref[:, 0:1], 0)
+        north = jnp.where(nbr_ok(0, -1), n_ref[block - 1:block, :], 0)
+        south = jnp.where(nbr_ok(0, 1), s_ref[0:1, :], 0)
+        west = jnp.where(nbr_ok(-1, 0), w_ref[:, block - 1:block], 0)
+        east = jnp.where(nbr_ok(1, 0), e_ref[:, 0:1], 0)
 
         up = jnp.concatenate([north, c[:-1, :]], axis=0)
         down = jnp.concatenate([c[1:, :], south], axis=0)
@@ -54,7 +71,7 @@ def _ca_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref,
 
             def nbr_member(dx, dy):
                 x, y = gx + dx, gy + dy
-                inside = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+                inside = (x >= 0) & (x < nx) & (y >= 0) & (y < ny)
                 return (inside & domain.cell_member(x, y, n)).astype(c.dtype)
 
             deg = (nbr_member(0, -1) + nbr_member(0, 1) +
@@ -67,39 +84,32 @@ def _ca_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("rule", "alpha", "block",
                                              "grid_mode", "fractal",
+                                             "storage", "n", "domain",
                                              "interpret"))
 def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             rule: str = "parity", alpha: float = 0.25, block: int = 128,
             grid_mode: str = "compact",
             fractal: str = "sierpinski-gasket",
+            storage: str = "embedded", n: int | None = None,
+            domain: BlockDomain | None = None,
             interpret: bool | None = None) -> jnp.ndarray:
     """One CA step.  ``stale_buf`` must be zero outside the fractal (e.g.
     the state from two steps ago, or zeros); it is donated as the output
-    buffer so unvisited blocks remain valid."""
-    n = state.shape[0]
+    buffer so unvisited blocks remain valid.  Under storage="compact"
+    both arrays are packed orthotope-resident (pass n= or domain=)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    block = min(block, n)
-    n_b = n // block
-    domain = make_fractal_domain(fractal, n_b)
-    plan = GridPlan(domain, grid_mode)
+    domain, n, block, storage = resolve_storage_args(
+        state, block, fractal, storage, n, domain)
+    plan = GridPlan(domain, grid_mode, storage=storage)
 
-    def _clamp(v):
-        return jnp.clip(v, 0, n_b - 1)
-
-    bs = functools.partial(plan.block_spec, (block, block))
-    center = bs(lambda bx, by: (by, bx))
-    in_specs = [
-        center,
-        bs(lambda bx, by: (_clamp(by - 1), bx)),   # north
-        bs(lambda bx, by: (_clamp(by + 1), bx)),   # south
-        bs(lambda bx, by: (by, _clamp(bx - 1))),   # west
-        bs(lambda bx, by: (by, _clamp(bx + 1))),   # east
-        center,                                    # stale double buffer
-    ]
+    center = plan.storage_spec((block, block))
+    in_specs = [center]
+    in_specs += [plan.neighbor_spec((block, block), j) for j in range(4)]
+    in_specs += [center]                               # stale double buffer
     call = plan.pallas_call(
         functools.partial(_ca_kernel, rule=rule, alpha=alpha, block=block,
-                          n=n, n_b=n_b, domain=domain),
+                          n=n, domain=domain),
         in_specs=in_specs,
         out_specs=center,
         out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),

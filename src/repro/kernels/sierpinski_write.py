@@ -14,15 +14,19 @@ follow-up work:
 * ``bounding`` -- the bounding-box baseline: n_b x n_b grid steps, with
   the run-time discard ``pl.when(block is member)``.
 
+Two storages (the ``storage=`` axis of GridPlan):
+
+* ``embedded`` -- the state array is the dense n x n bounding-box
+  layout (O(n^2) memory); blocks never visited by a compact grid keep
+  their previous contents via input/output aliasing.
+* ``compact`` -- the state array lives in the packed orthotope layout
+  of Lemma 2 (O(n^H) memory, ``CompactLayout``); the same kernels run
+  with their storage-operand index maps rewritten to packed slots.
+
 Intra-block threads use the paper's *bounding sub-boxes* option: a VPU
 mask from ``broadcasted_iota`` evaluating the domain's cell-membership
 test (the gasket's ``x & (n-1-y) == 0`` bit test, or the generalized
 base-m digit test for carpet / Vicsek / any registered FractalSpec).
-
-The written matrix is passed in and aliased to the output so that blocks
-never visited by the compact grid keep their previous contents (the
-embedded non-fractal region), matching the CUDA semantics of writing
-in-place into global memory.
 """
 from __future__ import annotations
 
@@ -33,12 +37,72 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.domain import BlockDomain, make_fractal_domain
-from repro.core.plan import GridPlan
+from repro.core.plan import GridPlan, normalize_storage
+
+
+def resolve_fractal_domain(fractal: str, n: int, block: int) -> BlockDomain:
+    """Validated block-grid domain for an embedded n x n fractal state.
+
+    Raises a clear ValueError when ``block`` does not divide ``n`` (a
+    truncated block grid would silently drop fractal coverage: e.g. a
+    16 x 16 gasket at block=6 only reaches 45 of its 81 member cells) or
+    when the resulting blocks-per-side is not a power of the fractal's
+    subdivision factor.
+    """
+    if n % block:
+        raise ValueError(
+            f"block={block} must divide n={n} (remainder {n % block}): "
+            f"the {n // block}-block grid would silently truncate "
+            f"fractal coverage")
+    n_b = n // block
+    try:
+        return make_fractal_domain(fractal, n_b)
+    except ValueError as e:
+        raise ValueError(
+            f"n/block = {n_b} blocks per side is not a valid scale level "
+            f"of fractal {fractal!r}: {e}") from None
+
+
+def resolve_storage_args(m, block, fractal, storage, n, domain):
+    """Shared entry-point validation for the fractal-state kernels.
+
+    Returns (domain, n, block, storage) with the state array ``m``
+    checked against the storage layout's expected shape.  ``n`` (the
+    embedded side length) must be passed explicitly under compact
+    storage when no ``domain`` is given, since the packed array's shape
+    no longer determines it.
+    """
+    storage = normalize_storage(storage)
+    if domain is None:
+        if n is None:
+            if storage == "compact":
+                raise ValueError(
+                    "storage='compact' needs the embedded size n= (or an "
+                    "explicit domain=): the packed array shape does not "
+                    "determine it")
+            if m.ndim != 2 or m.shape[0] != m.shape[1]:
+                raise ValueError(f"expected square 2-D state, got {m.shape}")
+            n = m.shape[0]
+        block = min(block, n)
+        domain = resolve_fractal_domain(fractal, n, block)
+    else:
+        nbx, nby = domain.bounding_box
+        if n is None:
+            n = nby * block
+    plan = GridPlan(domain, storage=storage)
+    want = plan.layout.array_shape(block) if storage == "compact" \
+        else plan.layout.embedded_shape(block)
+    if tuple(m.shape) != want:
+        raise ValueError(
+            f"{storage} state shape {tuple(m.shape)} does not match the "
+            f"expected {want} for block={block}")
+    return domain, n, block, storage
 
 
 def _cell_mask(domain: BlockDomain, bx, by, block: int, n: int):
     """VPU cell-membership mask for the (bx, by) tile (bounding
-    sub-boxes intra-block option)."""
+    sub-boxes intra-block option); (bx, by) are embedded block coords
+    under either storage."""
     iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
     ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
     gx = bx * block + ix
@@ -57,23 +121,27 @@ def _write_kernel(coords, m_ref, o_ref, *, value, block, n, domain):
 
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
-                                    "fractal", "interpret"))
+                                    "fractal", "storage", "n", "domain",
+                                    "interpret"))
 def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      block: int = 128, grid_mode: str = "compact",
                      fractal: str = "sierpinski-gasket",
+                     storage: str = "embedded", n: int | None = None,
+                     domain: BlockDomain | None = None,
                      interpret: bool | None = None) -> jnp.ndarray:
-    """Write ``value`` to every fractal cell of the embedded (n, n)
-    matrix.  grid_mode: closed_form (alias compact) | prefetch_lut |
-    bounding; fractal: any registered FractalSpec name."""
-    n = m.shape[0]
+    """Write ``value`` to every fractal cell of the (n, n) state.
+
+    grid_mode: closed_form (alias compact) | prefetch_lut | bounding;
+    fractal: any registered FractalSpec name; storage: embedded (m is
+    the dense n x n array) | compact (m is the packed orthotope array,
+    pass n= or domain=)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    block = min(block, n)
-    n_b = n // block
-    domain = make_fractal_domain(fractal, n_b)
-    plan = GridPlan(domain, grid_mode)
+    domain, n, block, storage = resolve_storage_args(
+        m, block, fractal, storage, n, domain)
+    plan = GridPlan(domain, grid_mode, storage=storage)
 
-    spec = plan.block_spec((block, block), lambda bx, by: (by, bx))
+    spec = plan.storage_spec((block, block))
     call = plan.pallas_call(
         functools.partial(_write_kernel, value=value, block=block, n=n,
                           domain=domain),
@@ -100,25 +168,28 @@ def _sum_kernel(coords, m_ref, o_ref, *, block, n, domain):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
-                                             "fractal", "interpret"))
+                                             "fractal", "storage", "n",
+                                             "domain", "interpret"))
 def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                    grid_mode: str = "compact",
                    fractal: str = "sierpinski-gasket",
+                   storage: str = "embedded", n: int | None = None,
+                   domain: BlockDomain | None = None,
                    interpret: bool | None = None) -> jnp.ndarray:
     """f32 sum over fractal cells, sequential accumulate over the plan's
-    grid (any lowering; the output block is revisited every step)."""
-    n = m.shape[0]
+    grid (any lowering; the output block is revisited every step).  The
+    grid enumeration -- and therefore the accumulation order -- depends
+    only on (domain, grid_mode), so compact and embedded storage are
+    bit-identical per lowering."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    block = min(block, n)
-    n_b = n // block
-    domain = make_fractal_domain(fractal, n_b)
-    plan = GridPlan(domain, grid_mode)
+    domain, n, block, storage = resolve_storage_args(
+        m, block, fractal, storage, n, domain)
+    plan = GridPlan(domain, grid_mode, storage=storage)
 
     call = plan.pallas_call(
         functools.partial(_sum_kernel, block=block, n=n, domain=domain),
-        in_specs=[plan.block_spec((block, block),
-                                  lambda bx, by: (by, bx))],
+        in_specs=[plan.storage_spec((block, block))],
         out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         interpret=interpret,

@@ -1,0 +1,457 @@
+"""Compact n^H storage subsystem tests (repro.core.compact + the
+``storage=`` axis of GridPlan and the kernels).
+
+Layers covered:
+  * map level: generalized ``lambda_inverse`` round-trips for every
+    FractalSpec, and the cell-level ``pack_to_orthotope`` /
+    ``unpack_from_orthotope`` identity on member cells;
+  * layout level: CompactLayout pack/unpack round-trips and
+    slot/neighbour addressing for every registered domain;
+  * kernel level: compact-resident write / sum / CA bit-identical to the
+    embedded-array kernels for every registered domain under all three
+    lowerings, and the flash compact-KV path;
+  * edge cases: the divisibility / window validation bugfixes and the
+    aliased unvisited-block-preservation (donation) semantics.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fractal as F
+from repro.core.compact import (NEIGHBOR_OFFSETS, CompactLayout,
+                                cell_neighbor_tables, key_block_support,
+                                pack_kv)
+from repro.core.domain import (BandDomain, make_attention_domain,
+                               make_fractal_domain)
+from repro.core.plan import LOWERINGS, GridPlan, registered_domains
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+#: per registered-domain block size compatible with cell-level
+#: membership (powers of the fractal's subdivision factor)
+_BLOCKS = {"sierpinski": 4, "carpet": 3, "vicsek": 3}
+
+
+def _small_domains():
+    return [pytest.param(name, dom, id=name)
+            for name, dom in registered_domains("small").items()]
+
+
+def _domain_state(dom, block):
+    """Embedded state: random on member cells of member blocks, zero
+    elsewhere (the CA invariant); returns (state, packed state, layout)."""
+    lay = CompactLayout(dom)
+    nbx, nby = dom.bounding_box
+    arr = np.zeros((nby * block, nbx * block), np.float32)
+    y, x = np.mgrid[0:nby * block, 0:nbx * block]
+    cm = np.asarray(dom.cell_member(x, y, nby * block))
+    for bx, by in dom.coords_host():
+        arr[by * block:(by + 1) * block, bx * block:(bx + 1) * block] = \
+            RNG.normal(size=(block, block))
+    arr = np.where(cm, arr, 0).astype(np.float32)
+    m = jnp.asarray(arr)
+    return m, lay.pack(m, block), lay
+
+
+# ---------------------------------------------------------------------------
+# map-level round trips (satellite: property tests)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r", range(1, 9))
+def test_gasket_lambda_inverse_roundtrip_full_orthotope(r):
+    ox, oy = F.orthotope_shape(r)
+    wy, wx = np.mgrid[0:oy, 0:ox]
+    lx, ly = F.lambda_map(wx, wy, r)
+    iwx, iwy = F.lambda_inverse(lx, ly, r)
+    assert np.array_equal(iwx, wx) and np.array_equal(iwy, wy)
+
+
+@pytest.mark.parametrize("spec", [F.SIERPINSKI, F.CARPET, F.VICSEK])
+@pytest.mark.parametrize("r", range(0, 5))
+def test_generalized_lambda_inverse_roundtrip(spec, r):
+    i = np.arange(spec.k ** r)
+    lx, ly = spec.lambda_map_linear(i, r)
+    lx, ly = np.asarray(lx), np.asarray(ly)
+    wx, wy = spec.lambda_inverse(lx, ly, r)
+    # the de-interleaved digits of i ARE the orthotope coordinate
+    wx2, wy2 = F.deinterleave_linear(i, spec.k, r)
+    assert np.array_equal(wx, wx2) and np.array_equal(wy, wy2)
+    assert np.array_equal(np.asarray(spec.linear_index(lx, ly, r)), i)
+    ox, oy = spec.orthotope_shape(r)
+    assert ox * oy == spec.k ** r
+    assert (wx < ox).all() and (wy < oy).all()
+
+
+@pytest.mark.parametrize("r", range(1, 9))
+def test_pack_unpack_orthotope_identity_on_member_cells(r):
+    n = 2 ** r
+    g = jnp.asarray(RNG.normal(size=(n, n)), jnp.float32)
+    u = np.asarray(F.unpack_from_orthotope(
+        F.pack_to_orthotope(g, r), r, n, fill=np.nan))
+    m = F.membership_grid(n)
+    np.testing.assert_array_equal(u[m], np.asarray(g)[m])
+    assert np.isnan(u[~m]).all()
+
+
+# ---------------------------------------------------------------------------
+# layout level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,dom", _small_domains())
+def test_layout_slots_are_injective_and_in_grid(name, dom):
+    lay = CompactLayout(dom)
+    slots = lay.slots_host()
+    assert slots.shape == (dom.num_blocks, 2)
+    assert len({tuple(s) for s in slots}) == dom.num_blocks
+    scols, srows = lay.grid_shape
+    assert lay.num_slots >= dom.num_blocks
+    assert (slots[:, 0] < scols).all() and (slots[:, 1] < srows).all()
+    # traceable slot(bx, by) agrees with the host enumeration
+    coords = dom.coords_host().astype(np.int64)
+    sx, sy = lay.slot(coords[:, 0], coords[:, 1])
+    np.testing.assert_array_equal(np.stack([sx, sy], -1), slots)
+
+
+@pytest.mark.parametrize("name,dom", _small_domains())
+def test_layout_pack_unpack_roundtrip(name, dom):
+    block = _BLOCKS.get(name, 4)
+    lay = CompactLayout(dom)
+    nbx, nby = dom.bounding_box
+    arr = jnp.asarray(RNG.normal(size=(nby * block, nbx * block)),
+                      jnp.float32)
+    packed = lay.pack(arr, block)
+    assert packed.shape == lay.array_shape(block)
+    u = np.asarray(lay.unpack(packed, block, fill=np.nan))
+    a = np.asarray(arr)
+    member = np.zeros((nby, nbx), bool)
+    coords = dom.coords_host()
+    member[coords[:, 1], coords[:, 0]] = True
+    for by in range(nby):
+        for bx in range(nbx):
+            tile = u[by * block:(by + 1) * block,
+                     bx * block:(bx + 1) * block]
+            if member[by, bx]:
+                np.testing.assert_array_equal(
+                    tile, a[by * block:(by + 1) * block,
+                            bx * block:(bx + 1) * block])
+            else:
+                assert np.isnan(tile).all()
+
+
+@pytest.mark.parametrize("name,dom", _small_domains())
+def test_layout_neighbor_slots_host(name, dom):
+    lay = CompactLayout(dom)
+    nbrs = lay.neighbor_slots_host()
+    coords = dom.coords_host()
+    member = {tuple(c) for c in coords}
+    slot_of = {tuple(c): tuple(s)
+               for c, s in zip(coords, lay.slots_host())}
+    nbx, nby = dom.bounding_box
+    for i, (bx, by) in enumerate(coords):
+        for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS):
+            x, y = int(bx) + dx, int(by) + dy
+            inr = 0 <= x < nbx and 0 <= y < nby
+            ok = inr and (x, y) in member and bool(dom.contains(x, y))
+            assert bool(nbrs[i, j, 2]) == ok
+            if ok:
+                assert tuple(nbrs[i, j, :2]) == slot_of[(x, y)]
+
+
+def test_compact_lut_carries_slots_and_neighbors():
+    dom = make_fractal_domain("sierpinski-gasket", 8)
+    plan = GridPlan(dom, "prefetch_lut", storage="compact")
+    lut = np.asarray(plan.lut())
+    assert lut.shape == (dom.num_blocks, 16)
+    np.testing.assert_array_equal(lut[:, :2], dom.coords_host())
+    np.testing.assert_array_equal(lut[:, 2:4], plan.layout.slots_host())
+    np.testing.assert_array_equal(
+        lut[:, 4:], plan.layout.neighbor_slots_host().reshape(-1, 12))
+
+
+def test_cell_neighbor_tables_match_dense_lookup():
+    r, n = 5, 32
+    t = cell_neighbor_tables(r)
+    i = np.arange(3 ** r)
+    lx, ly = F.lambda_map_linear(i, r)
+    lx, ly = np.asarray(lx), np.asarray(ly)
+    emb = np.full((n, n), 3 ** r, np.int64)
+    emb[ly, lx] = i
+    for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS):
+        x, y = lx + dx, ly + dy
+        ok = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+        want = np.where(ok, emb[np.clip(y, 0, n - 1),
+                                np.clip(x, 0, n - 1)], 3 ** r)
+        np.testing.assert_array_equal(t[j], want)
+
+
+# ---------------------------------------------------------------------------
+# kernel level: compact storage bit-identical to embedded
+# ---------------------------------------------------------------------------
+
+_FRACTAL_CASES = [("sierpinski-gasket", 32, 4), ("sierpinski-gasket", 64, 8),
+                  ("sierpinski-carpet", 27, 3), ("vicsek-cross", 27, 3)]
+
+
+def _fractal_state(fractal, n):
+    dom = make_fractal_domain(fractal, n)
+    y, x = np.mgrid[0:n, 0:n]
+    mask = np.asarray(dom.cell_member(x, y, n))
+    return jnp.asarray(np.where(mask, RNG.normal(size=(n, n)), 0),
+                       jnp.float32), mask
+
+
+@pytest.mark.parametrize("fractal,n,block", _FRACTAL_CASES)
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_write_compact_storage_equals_embedded(fractal, n, block, grid_mode):
+    m, mask = _fractal_state(fractal, n)
+    lay = CompactLayout(make_fractal_domain(fractal, n // block))
+    got_e = np.asarray(ops.sierpinski_write(
+        m, 7.0, block=block, grid_mode=grid_mode, fractal=fractal))
+    got_c = ops.sierpinski_write(
+        lay.pack(m, block), 7.0, block=block, grid_mode=grid_mode,
+        fractal=fractal, storage="compact", n=n)
+    np.testing.assert_array_equal(
+        np.asarray(lay.unpack(got_c, block))[mask], got_e[mask])
+    np.testing.assert_array_equal(
+        got_e, np.where(mask, np.float32(7.0), np.asarray(m)))
+
+
+@pytest.mark.parametrize("fractal,n,block", _FRACTAL_CASES)
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_sum_compact_storage_bit_identical(fractal, n, block, grid_mode):
+    m, _ = _fractal_state(fractal, n)
+    lay = CompactLayout(make_fractal_domain(fractal, n // block))
+    s_e = float(ops.sierpinski_sum(m, block=block, grid_mode=grid_mode,
+                                   fractal=fractal))
+    s_c = float(ops.sierpinski_sum(lay.pack(m, block), block=block,
+                                   grid_mode=grid_mode, fractal=fractal,
+                                   storage="compact", n=n))
+    assert s_e == s_c  # same grid enumeration -> same accumulation order
+
+
+@pytest.mark.parametrize("fractal,n,block", _FRACTAL_CASES)
+@pytest.mark.parametrize("rule", ["parity", "diffusion"])
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_ca_compact_storage_bit_identical(fractal, n, block, rule,
+                                          grid_mode):
+    m, mask = _fractal_state(fractal, n)
+    if rule == "parity":
+        m = jnp.asarray(np.where(mask, RNG.integers(0, 2, (n, n)), 0),
+                        jnp.float32)
+    lay = CompactLayout(make_fractal_domain(fractal, n // block))
+    got_e = np.asarray(ops.ca_step(m, jnp.zeros_like(m), rule=rule,
+                                   block=block, grid_mode=grid_mode,
+                                   fractal=fractal))
+    mp = lay.pack(m, block)
+    got_c = ops.ca_step(mp, jnp.zeros_like(mp), rule=rule, block=block,
+                        grid_mode=grid_mode, fractal=fractal,
+                        storage="compact", n=n)
+    np.testing.assert_array_equal(np.asarray(lay.unpack(got_c, block)),
+                                  got_e)
+    want = np.asarray(ref.ca_step_ref(m, rule)) \
+        if fractal == "sierpinski-gasket" else None
+    if want is not None:
+        np.testing.assert_allclose(got_e, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name,dom", _small_domains())
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_registered_domain_sum_and_ca_compact_equivalence(name, dom,
+                                                          grid_mode):
+    # acceptance: compact-resident ca_step and sierpinski_sum are
+    # bit-identical to the embedded kernels for EVERY registered domain
+    # under all three lowerings
+    block = _BLOCKS.get(name, 4)
+    m, mp, lay = _domain_state(dom, block)
+    s_e = float(ops.sierpinski_sum(m, block=block, grid_mode=grid_mode,
+                                   domain=dom))
+    s_c = float(ops.sierpinski_sum(mp, block=block, grid_mode=grid_mode,
+                                   domain=dom, storage="compact"))
+    assert s_e == s_c
+    c_e = np.asarray(ops.ca_step(m, jnp.zeros_like(m), rule="parity",
+                                 block=block, grid_mode=grid_mode,
+                                 domain=dom))
+    c_c = ops.ca_step(mp, jnp.zeros_like(mp), rule="parity", block=block,
+                      grid_mode=grid_mode, domain=dom, storage="compact")
+    np.testing.assert_array_equal(np.asarray(lay.unpack(c_c, block)), c_e)
+
+
+def test_ca_compact_multi_step_double_buffer():
+    fractal, n, block = "sierpinski-gasket", 32, 4
+    m, mask = _fractal_state(fractal, n)
+    m = jnp.asarray(np.where(mask, RNG.integers(0, 2, (n, n)), 0),
+                    jnp.float32)
+    lay = CompactLayout(make_fractal_domain(fractal, n // block))
+    a, b = lay.pack(m, block), lay.pack(jnp.zeros_like(m), block)
+    want = m
+    for _ in range(4):
+        new = ops.ca_step(a, b, rule="parity", block=block,
+                          storage="compact", n=n)
+        b, a = a, new
+        want = ref.ca_step_ref(want, "parity")
+    np.testing.assert_array_equal(np.asarray(lay.unpack(a, block)),
+                                  np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash compact-KV
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_flash_local_rectangular_matches_ref(grid_mode):
+    # decode convention: 128 queries against a 512-token cache
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 512, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 512, 32)), jnp.float32)
+    got = ops.flash_attention(q, k, v, kind="local", window=128,
+                              block_q=64, block_k=64, grid_mode=grid_mode)
+    want = ref.attention_ref(q, k, v, "local", window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_flash_compact_kv_bit_identical(grid_mode):
+    q = jnp.asarray(RNG.normal(size=(1, 4, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 512, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 512, 32)), jnp.float32)
+    dom = make_attention_domain("local", 2, 8, 3)
+    lo, hi = key_block_support(dom)
+    assert (lo, hi) == (4, 8)  # only the last sq + window tokens
+    kc, vc = pack_kv(k, dom, 64), pack_kv(v, dom, 64)
+    assert kc.shape[2] == 256
+    got_e = np.asarray(ops.flash_attention(
+        q, k, v, kind="local", window=128, block_q=64, block_k=64,
+        grid_mode=grid_mode))
+    got_c = np.asarray(ops.flash_attention(
+        q, kc, vc, kind="local", window=128, block_q=64, block_k=64,
+        grid_mode=grid_mode, storage="compact", kv_seq_len=512))
+    np.testing.assert_array_equal(got_e, got_c)
+
+
+def test_flash_compact_kv_identity_for_full_support():
+    # causal / square-local support is all of sk: compact == embedded
+    q = jnp.asarray(RNG.normal(size=(1, 2, 256, 32)), jnp.float32)
+    for kind, kw in (("causal", {}), ("local", {"window": 128})):
+        a = ops.flash_attention(q, q, q, kind=kind, block_q=64,
+                                block_k=64, **kw)
+        b = ops.flash_attention(q, q, q, kind=kind, block_q=64,
+                                block_k=64, storage="compact", **kw)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flash_local_rectangular_default_blocks():
+    # regression: with default block sizes, min(block_q, sq) and
+    # min(block_k, sk) used to diverge for sq < 128 <= sk and trip the
+    # square-block check on the advertised decode path
+    q = jnp.asarray(RNG.normal(size=(1, 1, 64, 8)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1024, 8)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 1, 1024, 8)), jnp.float32)
+    got = ops.flash_attention(q, k, v, kind="local", window=128)
+    want = ref.attention_ref(q, k, v, "local", window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_compact_kv_shape_validation():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 512, 32)), jnp.float32)
+    with pytest.raises(ValueError, match="key positions"):
+        ops.flash_attention(q, k, k, kind="local", window=128,
+                            block_q=64, block_k=64, storage="compact",
+                            kv_seq_len=512)
+
+
+# ---------------------------------------------------------------------------
+# edge-case bugfix regression tests
+# ---------------------------------------------------------------------------
+
+def test_band_domain_rejects_zero_window():
+    with pytest.raises(ValueError, match="at least 1 block"):
+        BandDomain(8, 0)
+
+
+def test_local_attention_domain_requires_window_blocks():
+    # the old default window_blocks=0 built a degenerate BandDomain with
+    # num_blocks == 0 and a divide-by-zero decode returning garbage
+    with pytest.raises(ValueError, match="window_blocks"):
+        make_attention_domain("local", 8, 8)
+
+
+def test_band_domain_rectangular_enumeration():
+    d = BandDomain(2, 3, m_k=8)
+    assert d.num_blocks == 6
+    coords = {tuple(c) for c in d.coords_host()}
+    assert coords == {(4, 0), (5, 0), (6, 0), (5, 1), (6, 1), (7, 1)}
+    for bx, by in coords:
+        assert bool(d.contains(bx, by))
+        i = int(d.linear_index(bx, by))
+        assert tuple(int(c) for c in d.block_coords(i)) == (bx, by)
+    with pytest.raises(ValueError, match="m_k - m_q"):
+        BandDomain(2, 5, m_k=4)
+
+
+@pytest.mark.parametrize("entry", ["write", "sum", "ca"])
+def test_kernels_reject_non_dividing_block(entry):
+    # verified bug: sierpinski_write(zeros(16,16), block=6) silently
+    # wrote 45 of 81 member cells
+    m = jnp.zeros((16, 16), jnp.float32)
+    with pytest.raises(ValueError, match="must divide"):
+        if entry == "write":
+            ops.sierpinski_write(m, 1.0, block=6)
+        elif entry == "sum":
+            ops.sierpinski_sum(m, block=6)
+        else:
+            ops.ca_step(m, jnp.zeros_like(m), block=6)
+
+
+@pytest.mark.parametrize("entry", ["write", "sum", "ca"])
+def test_kernels_reject_non_power_block_grid(entry):
+    # 24/8 = 3 blocks per side is not a power of the gasket's m=2
+    m = jnp.zeros((24, 24), jnp.float32)
+    with pytest.raises(ValueError, match="scale level"):
+        if entry == "write":
+            ops.sierpinski_write(m, 1.0, block=8)
+        elif entry == "sum":
+            ops.sierpinski_sum(m, block=8)
+        else:
+            ops.ca_step(m, jnp.zeros_like(m), block=8)
+
+
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_write_preserves_unvisited_blocks_under_all_lowerings(grid_mode):
+    # donation/alias semantics: blocks never visited by the compact grid
+    # must keep their previous contents through the input/output alias
+    # (incl. the shifted alias indices of the prefetch_lut path)
+    n, block = 32, 4
+    sentinel = np.arange(n * n, dtype=np.float32).reshape(n, n) + 100.0
+    m = jnp.asarray(sentinel)
+    out = np.asarray(ops.sierpinski_write(m, 7.0, block=block,
+                                          grid_mode=grid_mode))
+    mask = F.membership_grid(n)
+    np.testing.assert_array_equal(out[~mask], sentinel[~mask])
+    np.testing.assert_array_equal(out[mask], np.float32(7.0))
+
+
+@pytest.mark.parametrize("grid_mode", LOWERINGS)
+def test_write_alias_none_vs_empty_consistent(grid_mode):
+    # GridPlan.pallas_call must treat None and {} aliases identically
+    dom = make_fractal_domain("sierpinski-gasket", 8)
+    plan = GridPlan(dom, grid_mode)
+    from repro.kernels.sierpinski_write import _sum_kernel
+    import functools as ft
+    import jax
+    m = jnp.asarray(RNG.normal(size=(32, 32)), jnp.float32)
+    outs = []
+    for aliases in (None, {}):
+        call = plan.pallas_call(
+            ft.partial(_sum_kernel, block=4, n=32, domain=dom),
+            in_specs=[plan.storage_spec((4, 4))],
+            out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            input_output_aliases=aliases,
+            interpret=True,
+        )
+        outs.append(float(call(m)[0, 0]))
+    assert outs[0] == outs[1]
