@@ -51,6 +51,68 @@ def embedded_parity_step(state, n):
     return ref.ca_step_ref(state, "parity")
 
 
+def run_sched_ab(iters: int = 3, steps: int = 16, cases=((128, 8),)):
+    """Fused/coarsened schedule A/B: T x ca_step (the old per-step
+    driver) vs one scanned ca_run at several fuse/coarsen settings.
+
+    Every row carries ``speedup_vs_bounding`` (the paper's baseline:
+    per-step bounding-box grid) and the fused/coarsened rows also carry
+    ``speedup`` vs the per-step closed-form driver -- the launch-count
+    arithmetic is ceil(T/fuse) launches instead of T."""
+    print("# CA schedule A/B: fused ca_run vs per-step driver "
+          f"(T={steps} parity steps)")
+    for n, block in cases:
+        mask = F.membership_grid(n)
+        rng = np.random.default_rng(0)
+        a0 = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                         .astype(np.float32))
+        z0 = jnp.zeros_like(a0)
+
+        def per_step(a, b, gm):
+            for _ in range(steps):
+                new = ops.ca_step(a, b, rule="parity", block=block,
+                                  grid_mode=gm)
+                b, a = a, new
+            return a
+
+        t_bound = time_fn(per_step, a0, z0, "bounding", warmup=1,
+                          iters=iters)
+        t_step = time_fn(per_step, a0, z0, "closed_form", warmup=1,
+                         iters=iters)
+        row(f"ca_sched/per_step/bounding/n={n}/rho={block}", t_bound,
+            f"launches={steps};speedup_vs_bounding=1.00")
+        row(f"ca_sched/per_step/closed_form/n={n}/rho={block}", t_step,
+            f"launches={steps};"
+            f"speedup_vs_bounding={t_bound / t_step:.2f}")
+
+        def fused(fuse, coarsen):
+            return time_fn(
+                lambda a, b: ops.ca_run(a, b, steps, fuse=fuse,
+                                        rule="parity", block=block,
+                                        grid_mode="closed_form",
+                                        coarsen=coarsen, donate=False),
+                a0, z0, warmup=1, iters=iters)
+
+        for fuse in (4, min(16, block)):
+            t_f = fused(fuse, 1)
+            launches = len(ops.launch_schedule(steps, fuse))
+            row(f"ca_sched/fused/fuse={fuse}/n={n}/rho={block}", t_f,
+                f"launches={launches};speedup={t_step / t_f:.2f};"
+                f"speedup_vs_bounding={t_bound / t_f:.2f}")
+        for s in (2, 4):
+            if (n // block) % s or s >= n // block:
+                continue
+            t_c = fused(1, s)
+            row(f"ca_sched/coarsen/s={s}/n={n}/rho={block}", t_c,
+                f"launches={steps};speedup={t_step / t_c:.2f};"
+                f"speedup_vs_bounding={t_bound / t_c:.2f}")
+        t_fc = fused(4, 2)
+        launches = len(ops.launch_schedule(steps, 4))
+        row(f"ca_sched/fused+coarsen/fuse=4/s=2/n={n}/rho={block}", t_fc,
+            f"launches={launches};speedup={t_step / t_fc:.2f};"
+            f"speedup_vs_bounding={t_bound / t_fc:.2f}")
+
+
 def run_kernel_storage_ab(iters: int = 5):
     """Pallas ca_step: embedded vs orthotope-resident compact storage."""
     print("# Pallas ca_step storage A/B (embedded n^2 vs compact n^H blocks)")
@@ -79,7 +141,10 @@ def run_kernel_storage_ab(iters: int = 5):
 
 
 def run(max_r: int = 11, storage: str = "both",
-        embedded_max_r: int = EMBEDDED_MAX_R, kernel_ab: bool = True):
+        embedded_max_r: int = EMBEDDED_MAX_R, kernel_ab: bool = True,
+        sched_ab: bool = True):
+    if sched_ab:
+        run_sched_ab()
     if kernel_ab:
         run_kernel_storage_ab()
     print("# CA step: embedded n^2 stencil vs packed n^H gather (XLA)")
@@ -125,10 +190,12 @@ def main():
     ap.add_argument("--max-r", type=int, default=11)
     ap.add_argument("--embedded-max-r", type=int, default=EMBEDDED_MAX_R)
     ap.add_argument("--no-kernel-ab", action="store_true")
+    ap.add_argument("--no-sched-ab", action="store_true")
     args = ap.parse_args()
     run(max_r=args.max_r, storage=args.storage,
         embedded_max_r=args.embedded_max_r,
-        kernel_ab=not args.no_kernel_ab)
+        kernel_ab=not args.no_kernel_ab,
+        sched_ab=not args.no_sched_ab)
 
 
 if __name__ == "__main__":

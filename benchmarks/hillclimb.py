@@ -1,6 +1,15 @@
-"""SS-Perf hillclimb driver: run the three selected cells through their
-optimization variants (each a dryrun --opt override set), collect the
-roofline terms, and print the iteration log table.
+"""SS-Perf hillclimb driver.
+
+Two suites:
+
+* LM dryrun cells (the original): run the three selected cells through
+  their optimization variants (each a dryrun --opt override set),
+  collect the roofline terms, and print the iteration log table.
+* Fractal-kernel cells (``python -m benchmarks.hillclimb fractal``):
+  the CA / write kernels swept over the scheduling axes
+  ``lowering x storage x fuse x coarsen``, riding the autotuner's
+  measurement path (:func:`repro.core.tune.autotune`) so the hillclimb
+  table and the tuner can never disagree about what was measured.
 
 Variants are cumulative where that matches the methodology (biggest
 predicted win first); every run lands in results/hillclimb/ so the
@@ -77,5 +86,66 @@ def run(results_dir="results/hillclimb", mesh="single"):
     return rows
 
 
+# (cell-name, kernel, autotune kwargs): the fractal-kernel hillclimb
+# cells; the variant axes are the autotuner's full candidate product
+# lowering x storage x fuse x coarsen (write has no fuse axis).
+FRACTAL_CELLS = [
+    ("ca-gasket-n128-parity", "ca",
+     dict(n=128, block=8, rule="parity", max_fuse=8, max_coarsen=4)),
+    ("ca-gasket-n64-diffusion", "ca",
+     dict(n=64, block=8, rule="diffusion", max_fuse=8, max_coarsen=2)),
+    ("write-gasket-n256", "write",
+     dict(n=256, block=16, max_coarsen=4)),
+]
+
+
+def _variant_name(cfg):
+    bits = [cfg["lowering"], cfg["storage"]]
+    if cfg.get("fuse", 1) != 1:
+        bits.append(f"fuse{cfg['fuse']}")
+    if cfg.get("coarsen", 1) != 1:
+        bits.append(f"coarsen{cfg['coarsen']}")
+    return "+".join(bits)
+
+
+def run_fractal(results_dir="results/hillclimb"):
+    """Measure every scheduling variant of the fractal cells and print
+    the iteration log, baseline (bounding / embedded / unfused) first."""
+    from repro.core import tune
+
+    os.makedirs(results_dir, exist_ok=True)
+    rows = []
+    for name, kernel, kw in FRACTAL_CELLS:
+        cache = tune.TuneCache(os.path.join(results_dir,
+                                            f"fractal__{name}.json"))
+        search = tune.autotune_ca if kernel == "ca" else \
+            tune.autotune_write
+        print(f"measuring {name} "
+              f"(lowering x storage x fuse x coarsen) ...", flush=True)
+        best_cfg, best_us, trials = search(cache=cache, force=True, **kw)
+        with open(os.path.join(results_dir,
+                               f"fractal__{name}__trials.json"),
+                  "w") as f:
+            json.dump([{**c, "us": round(u, 2)} for c, u in trials], f,
+                      indent=1)
+        base = next((u for c, u in trials
+                     if c["lowering"] == "bounding"
+                     and c["storage"] == "embedded"
+                     and c.get("fuse", 1) == 1
+                     and c.get("coarsen", 1) == 1), None)
+        for cfg, us in sorted(trials, key=lambda t: -t[1]):
+            rows.append((name, _variant_name(cfg), us,
+                         base / us if base else float("nan"),
+                         cfg == best_cfg))
+    print("\ncell,variant,us_per_call,speedup_vs_baseline,winner")
+    for r in rows:
+        print(f"{r[0]},{r[1]},{r[2]:.1f},{r[3]:.2f},"
+              f"{'*' if r[4] else ''}")
+    return rows
+
+
 if __name__ == "__main__":
-    run(*(sys.argv[1:]))
+    if sys.argv[1:2] == ["fractal"]:
+        run_fractal(*(sys.argv[2:]))
+    else:
+        run(*(sys.argv[1:]))

@@ -1,16 +1,27 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV;
-# optionally mirror the rows to a JSON artifact with --json.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and mirror the rows to a machine-readable artifact: by default
+# ``BENCH_<tag>.json`` at the repo root (tag = jax backend), so every
+# benchmark run leaves a comparable point on the perf trajectory.
+# ``--json PATH`` overrides the path, ``--no-json`` suppresses it.
 import argparse
+import os
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: map,space,time,ca,attn")
+                    help="comma list: map,space,time,ca,sched,attn")
     ap.add_argument("--json", default=None,
-                    help="also write all rows to this JSON file")
+                    help="artifact path (default: BENCH_<tag>.json at "
+                         "the repo root)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the JSON artifact")
+    ap.add_argument("--tag", default=None,
+                    help="artifact tag (default: jax backend)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    import jax
 
     from . import (bench_attention_domains, bench_ca, bench_map_time,
                    bench_sierpinski_map, bench_space_efficiency, common)
@@ -22,12 +33,20 @@ def main() -> None:
         bench_space_efficiency.run()
     if only is None or "time" in only:
         bench_map_time.run()
+    if only is None or "sched" in only:
+        bench_ca.run_sched_ab()
     if only is None or "ca" in only:
-        bench_ca.run()
+        bench_ca.run(sched_ab=False)
     if only is None or "attn" in only:
         bench_attention_domains.run()
-    if args.json:
-        common.dump_json(args.json)
+    if not args.no_json:
+        path = args.json
+        if path is None:
+            tag = args.tag or jax.default_backend()
+            root = os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__)))
+            path = os.path.join(root, f"BENCH_{tag}.json")
+        common.dump_json(path)
 
 
 if __name__ == '__main__':

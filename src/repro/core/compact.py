@@ -44,6 +44,13 @@ from .domain import (BlockDomain, GeneralizedFractalDomain,
 #: and the CA kernel: north, south, west, east (dx, dy).
 NEIGHBOR_OFFSETS = ((0, -1), (0, 1), (-1, 0), (1, 0))
 
+#: full 8-neighbour halo (the first four rows are NEIGHBOR_OFFSETS, so
+#: 4-neighbour consumers index the same table): N S W E, then the
+#: corners NW NE SW SE.  Temporal CA fusion needs the corners: after T
+#: fused steps a block's footprint is every cell within L1 distance T,
+#: which reaches into the diagonal blocks for T >= 2.
+NEIGHBOR_OFFSETS8 = NEIGHBOR_OFFSETS + ((-1, -1), (1, -1), (-1, 1), (1, 1))
+
 
 def _is_host(x) -> bool:
     return isinstance(x, (int, np.integer, np.ndarray))
@@ -146,14 +153,16 @@ class CompactLayout:
         return self._slots_host
 
     def neighbor_slots_host(self) -> np.ndarray:
-        """(num_blocks, 4, 3) int32: per compact block and N/S/W/E
-        neighbour the (sx, sy, valid) triple; invalid neighbours point at
-        slot (0, 0) with valid = 0.  This is the lambda^-1-resolved halo
-        table the ``prefetch_lut`` lowering ships to the scalar core."""
+        """(num_blocks, 8, 3) int32: per compact block and
+        N/S/W/E/NW/NE/SW/SE neighbour (``NEIGHBOR_OFFSETS8`` order, so
+        rows [:4] are the von-Neumann halo) the (sx, sy, valid) triple;
+        invalid neighbours point at slot (0, 0) with valid = 0.  This is
+        the lambda^-1-resolved halo table the ``prefetch_lut`` lowering
+        ships to the scalar core."""
         if self._neighbors_host is None:
             coords = self.domain.coords_host().astype(np.int64)
-            out = np.zeros((len(coords), 4, 3), np.int32)
-            for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS):
+            out = np.zeros((len(coords), 8, 3), np.int32)
+            for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
                 sx, sy, ok = self.neighbor_slot(coords[:, 0], coords[:, 1],
                                                 dx, dy)
                 out[:, j, 0] = np.asarray(sx)
@@ -227,6 +236,141 @@ class CompactLayout:
         out = out.at[coords[:, 1], coords[:, 0]].set(sel)
         return jnp.moveaxis(out, 2, 1).reshape(
             (nby * block, nbx * block) + trailing)
+
+
+# ---------------------------------------------------------------------------
+# Superblock coarsening geometry: each coarse grid step owns an s x s
+# embedded tile of fine blocks (s = m**j), amortizing the lambda decode
+# by the tile's member count (k**j for a fractal).  In the packed
+# orthotope the members of one coarse block occupy a contiguous
+# k**ceil(j/2) x k**floor(j/2) sub-rectangle of fine slots, because the
+# low j base-k digits of the lambda-linear index deinterleave into the
+# LOW digits of (w_x, w_y) while the high digits are exactly the coarse
+# domain's own orthotope coordinate (transposed when j is odd, since the
+# alternating unrolling flips parity by j levels).
+# ---------------------------------------------------------------------------
+
+
+class SuperTiling:
+    """Coarsened schedule geometry for a *fractal* block domain.
+
+    Parameters
+    ----------
+    domain:  a SierpinskiDomain / GeneralizedFractalDomain at level r.
+    s:       embedded fine blocks per superblock side; must be m**j for
+             the fractal's subdivision factor m, with 1 <= j <= r.
+
+    Exposes the coarse domain (same fractal family at level r - j), the
+    packed sub-rectangle shape, traceable coarse-tile addressing for
+    ``BlockSpec.index_map`` code, and the static fine-block permutation
+    between packed and embedded arrangement of one supertile.
+    """
+
+    def __init__(self, domain: BlockDomain, s: int):
+        if isinstance(domain, SierpinskiDomain):
+            spec = F.SIERPINSKI
+        elif isinstance(domain, GeneralizedFractalDomain):
+            spec = domain.spec
+        else:
+            raise ValueError(
+                f"coarsen={s} needs a fractal domain (the lambda decode "
+                f"being amortized); got {domain.name!r}")
+        j = int(round(math.log(s, spec.m)))
+        if s < 2 or spec.m ** j != s:
+            raise ValueError(
+                f"coarsen={s} must be a power >= {spec.m} of the "
+                f"fractal's subdivision factor m={spec.m}")
+        if j > domain.r_b:
+            raise ValueError(
+                f"coarsen={s} exceeds the domain's {spec.m ** domain.r_b} "
+                f"blocks per side")
+        self.fine = domain
+        self.spec = spec
+        self.s, self.j = s, j
+        n_b = spec.m ** domain.r_b
+        if isinstance(domain, SierpinskiDomain):
+            self.coarse: BlockDomain = SierpinskiDomain(n_b // s)
+        else:
+            self.coarse = GeneralizedFractalDomain(spec, n_b // s)
+        k = spec.k
+        #: packed sub-rectangle of one supertile, in fine blocks
+        #: (cols = w_x gets the even low levels, rows = w_y the odd).
+        self.sub_shape = (k ** (j // 2), k ** ((j + 1) // 2))  # (bw, bh)
+        self._coarse_layout = CompactLayout(self.coarse)
+        self._tile_map = None
+        self._tiles_host = None
+        self._neighbor_tiles_host = None
+
+    @property
+    def members_per_tile(self) -> int:
+        return self.spec.k ** self.j
+
+    def tile_index(self, BX, BY):
+        """Coarse embedded block coords -> (tx, ty) packed supertile
+        index (traceable; the fine orthotope is tiled by supertiles of
+        ``sub_shape`` fine slots).  When j is odd the alternating digit
+        unrolling flips parity, so the coarse orthotope coordinate lands
+        transposed."""
+        wx, wy = self._coarse_layout.slot(BX, BY)
+        return (wx, wy) if self.j % 2 == 0 else (wy, wx)
+
+    def neighbor_tile(self, BX, BY, dx, dy):
+        """Traceable (tx, ty, valid) of the coarse neighbour supertile
+        (clamped to tile (0, 0) when out of range / non-member)."""
+        nbx, nby = self.coarse.bounding_box
+        x, y = BX + dx, BY + dy
+        xc = _clip(x, 0, nbx - 1)
+        yc = _clip(y, 0, nby - 1)
+        ok = (x >= 0) & (x < nbx) & (y >= 0) & (y < nby) \
+            & self.coarse.contains(xc, yc)
+        tx, ty = self.tile_index(xc, yc)
+        where = np.where if _is_host(BX) else jnp.where
+        return where(ok, tx, 0), where(ok, ty, 0), ok
+
+    def tile_map(self):
+        """Static fine-block permutation of one supertile: a tuple of
+        ``((oy, ox), (ey, ex))`` pairs mapping packed sub-rect position
+        (ox, oy) to embedded offset (ex, ey) in fine-block units, one
+        per member (the same for every supertile: the low lambda digits
+        do not depend on the coarse block)."""
+        if self._tile_map is None:
+            k, j = self.spec.k, self.j
+            pairs = []
+            for i in range(k ** j):
+                ox, oy = F.deinterleave_linear(i, k, j)
+                ex, ey = self.spec.lambda_map_linear(i, j)
+                pairs.append(((int(oy), int(ox)), (int(ey), int(ex))))
+            self._tile_map = tuple(pairs)
+        return self._tile_map
+
+    # -- host tables (the prefetch_lut payload under coarsening) -------------
+
+    def tiles_host(self) -> np.ndarray:
+        """(coarse.num_blocks, 2) int32 (tx, ty) per coarse enumeration
+        index."""
+        if self._tiles_host is None:
+            c = self.coarse.coords_host().astype(np.int64)
+            tx, ty = self.tile_index(c[:, 0], c[:, 1])
+            t = np.stack([np.asarray(tx), np.asarray(ty)], -1)
+            t = t.astype(np.int32)
+            t.setflags(write=False)
+            self._tiles_host = t
+        return self._tiles_host
+
+    def neighbor_tiles_host(self) -> np.ndarray:
+        """(coarse.num_blocks, 8, 3) int32 of (tx, ty, valid) per
+        NEIGHBOR_OFFSETS8 coarse neighbour."""
+        if self._neighbor_tiles_host is None:
+            c = self.coarse.coords_host().astype(np.int64)
+            out = np.zeros((len(c), 8, 3), np.int32)
+            for jj, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
+                tx, ty, ok = self.neighbor_tile(c[:, 0], c[:, 1], dx, dy)
+                out[:, jj, 0] = np.asarray(tx)
+                out[:, jj, 1] = np.asarray(ty)
+                out[:, jj, 2] = np.asarray(ok)
+            out.setflags(write=False)
+            self._neighbor_tiles_host = out
+        return self._neighbor_tiles_host
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,22 @@ Lowerings
 Kernels written against a plan receive a :class:`BlockCoords` as their
 first argument and are lowering-agnostic; any registered domain works in
 any kernel under any lowering.
+
+Superblock coarsening (``coarsen=s``)
+-------------------------------------
+
+``GridPlan(domain, ..., coarsen=s)`` makes each grid step own an s x s
+embedded tile of fine blocks (s a power of the fractal's subdivision
+factor): the grid enumerates the *coarse* domain (the same fractal at
+level ``r - log_m s``), so the lambda decode runs once per superblock
+and is amortized over its ``k**j`` member blocks.  ``storage_spec`` /
+``neighbor_spec`` then emit supertile-sized BlockSpecs: a contiguous
+(s*block)^2 region under embedded storage, or the contiguous
+``k**ceil(j/2) x k**floor(j/2)`` fine-slot sub-rectangle of the packed
+orthotope under compact storage (see
+:class:`~repro.core.compact.SuperTiling`).  ``tile_map()`` /
+``cell_offset_grids()`` give kernels the static packed<->embedded
+fine-block permutation of one supertile.  See README "Scheduling".
 """
 from __future__ import annotations
 
@@ -61,10 +77,12 @@ _ALIASES = {"compact": "closed_form"}
 
 STORAGES = ("embedded", "compact")
 
-#: LUT column layout under ``storage="compact"``: the embedded block
-#: coords, the block's own packed slot, then per N/S/W/E neighbour the
-#: (sx, sy, valid) triple from CompactLayout.neighbor_slots_host().
+#: LUT column layout under ``storage="compact"``: the embedded (coarse)
+#: block coords, the block's own packed slot / supertile index, then per
+#: N/S/W/E/NW/NE/SW/SE neighbour (NEIGHBOR_OFFSETS8 order) the
+#: (sx, sy, valid) triple -- 2 + 2 + 8*3 = 28 i32 columns.
 _LUT_BX, _LUT_BY, _LUT_SX, _LUT_SY, _LUT_NBR = 0, 1, 2, 3, 4
+_LUT_COLS = 28
 
 
 def normalize_lowering(name: str) -> str:
@@ -141,14 +159,32 @@ class GridPlan:
                  storage-array index maps emitted by ``storage_spec`` /
                  ``neighbor_spec`` address packed slots instead of
                  embedded block coords).
+    coarsen:     s >= 1 embedded fine blocks per superblock side; s > 1
+                 requires a fractal domain with s a power of its
+                 subdivision factor.  The grid then enumerates the
+                 coarse domain and every storage/neighbour spec covers
+                 an s x s tile of fine blocks (the decode amortization
+                 of Quezada et al.'s coarsening, on the block level).
     """
 
     def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
-                 batch_dims: Sequence[int] = (), storage: str = "embedded"):
+                 batch_dims: Sequence[int] = (), storage: str = "embedded",
+                 coarsen: int = 1):
         self.domain = domain
         self.lowering = normalize_lowering(lowering)
         self.batch_dims = tuple(int(d) for d in batch_dims)
         self.storage = normalize_storage(storage)
+        self.coarsen = int(coarsen)
+        if self.coarsen < 1:
+            raise ValueError(f"coarsen must be >= 1, got {coarsen}")
+        if self.coarsen == 1:
+            self._tiling = None
+            #: the domain the *grid* enumerates (coarse under coarsening)
+            self.sched_domain: BlockDomain = domain
+        else:
+            from .compact import SuperTiling
+            self._tiling = SuperTiling(domain, self.coarsen)
+            self.sched_domain = self._tiling.coarse
         self._layout = None
 
     @property
@@ -170,9 +206,9 @@ class GridPlan:
     @property
     def grid(self) -> Tuple[int, ...]:
         if self.lowering == "bounding":
-            nbx, nby = self.domain.bounding_box
+            nbx, nby = self.sched_domain.bounding_box
             return self.batch_dims + (nby, nbx)
-        return self.batch_dims + (self.domain.num_blocks,)
+        return self.batch_dims + (self.sched_domain.num_blocks,)
 
     @property
     def num_steps(self) -> int:
@@ -185,26 +221,38 @@ class GridPlan:
         return 1 if self.lowering == "prefetch_lut" else 0
 
     def lut(self) -> jnp.ndarray:
-        """Host-built i32 decode table, one row per member block.
+        """Host-built i32 decode table, one row per scheduled (member /
+        coarse) block.
 
         embedded storage: (num_blocks, 2) of (bx, by).
-        compact storage:  (num_blocks, 16): (bx, by, sx, sy) plus the
-        four (sx, sy, valid) neighbour-slot triples, so every compact
-        address resolve -- including the CA halo gathers -- is an O(1)
-        scalar-memory read."""
-        coords = self.domain.coords_host()
+        compact storage:  (num_blocks, 28): (bx, by, sx, sy) plus the
+        eight (sx, sy, valid) neighbour-slot triples (NEIGHBOR_OFFSETS8
+        order), so every compact address resolve -- including the 8-way
+        CA halo gathers -- is an O(1) scalar-memory read.  Under
+        ``coarsen`` the rows are coarse blocks and the slot columns are
+        supertile indices (the rows widen per superblock, never per
+        fine block: that is the amortization)."""
+        coords = self.sched_domain.coords_host()
         if self.storage == "embedded":
             return jnp.asarray(coords)
-        slots = self.layout.slots_host()
-        nbrs = self.layout.neighbor_slots_host().reshape(len(coords), 12)
-        return jnp.asarray(
-            np.concatenate([coords, slots, nbrs], axis=1).astype(np.int32))
+        if self._tiling is not None:
+            slots = self._tiling.tiles_host()
+            nbrs = self._tiling.neighbor_tiles_host()
+        else:
+            slots = self.layout.slots_host()
+            nbrs = self.layout.neighbor_slots_host()
+        nbrs = nbrs.reshape(len(coords), 24)
+        table = np.concatenate([coords, slots, nbrs],
+                               axis=1).astype(np.int32)
+        assert table.shape[1] == _LUT_COLS
+        return jnp.asarray(table)
 
     # -- the one shared decode ---------------------------------------------
 
     def _decode(self, grid_ids, lut_ref=None):
-        """grid step -> (batch_ids, bx, by).  Shared by every operand's
-        index map and by the kernel prologue."""
+        """grid step -> (batch_ids, bx, by) in the *scheduled* (coarse)
+        block space.  Shared by every operand's index map and by the
+        kernel prologue."""
         nb = len(self.batch_dims)
         batch = tuple(grid_ids[:nb])
         if self.lowering == "bounding":
@@ -213,7 +261,7 @@ class GridPlan:
             t = grid_ids[nb]
             bx, by = lut_ref[t, 0], lut_ref[t, 1]
         else:  # closed_form
-            bx, by = self.domain.block_coords(grid_ids[nb])
+            bx, by = self.sched_domain.block_coords(grid_ids[nb])
         return batch, bx, by
 
     # -- per-operand index maps --------------------------------------------
@@ -240,55 +288,118 @@ class GridPlan:
 
     # -- storage-array specs (embedded vs compact addressing) ---------------
 
+    def supertile_shape(self, block_shape) -> Tuple[int, int]:
+        """Cell shape of one storage supertile for fine ``block_shape``
+        tiles: (s*b0, s*b1) embedded, (bh*b0, bw*b1) packed."""
+        b0, b1 = block_shape
+        if self.storage == "embedded" or self._tiling is None:
+            return (self.coarsen * b0, self.coarsen * b1)
+        bw, bh = self._tiling.sub_shape
+        return (bh * b0, bw * b1)
+
+    def tile_map(self):
+        """Static packed->embedded fine-block permutation of one storage
+        supertile as ``((oy, ox), (ey, ex))`` pairs, or ``None`` when
+        the supertile is already embedded-arranged (embedded storage, or
+        coarsen=1 where the tile is a single block)."""
+        if self.storage == "embedded" or self._tiling is None:
+            return None
+        return self._tiling.tile_map()
+
+    def cell_offset_grids(self, block: int):
+        """(OY, OX) host i32 arrays shaped like the storage supertile:
+        the embedded cell offset of every supertile cell relative to the
+        superblock's embedded origin ``(by*s*block, bx*s*block)``.  For
+        the trivial layouts this is a plain meshgrid; under compact
+        coarsening it bakes the fine-block permutation in, so kernels
+        evaluate membership masks directly on the packed arrangement."""
+        tm = self.tile_map()
+        if tm is None:
+            h, w = self.supertile_shape((block, block))
+            oy, ox = np.mgrid[0:h, 0:w]
+            return oy.astype(np.int32), ox.astype(np.int32)
+        h, w = self.supertile_shape((block, block))
+        oy = np.zeros((h, w), np.int32)
+        ox = np.zeros((h, w), np.int32)
+        cy, cx = np.mgrid[0:block, 0:block]
+        for (py, px), (ey, ex) in tm:
+            oy[py * block:(py + 1) * block,
+               px * block:(px + 1) * block] = ey * block + cy
+            ox[py * block:(py + 1) * block,
+               px * block:(px + 1) * block] = ex * block + cx
+        return oy, ox
+
     def storage_spec(self, block_shape) -> pl.BlockSpec:
         """BlockSpec for a 2-D state-array operand under this plan's
-        storage: embedded -> block (by, bx) of the bounding-box array;
-        compact -> the packed slot (sy, sx) of the layout.  Under
+        storage: embedded -> supertile (by, bx) of the bounding-box
+        array; compact -> the packed slot (sy, sx) of the layout (the
+        supertile sub-rectangle index under coarsening).  Under
         ``prefetch_lut`` the slot is read from the extended LUT; the
-        other lowerings evaluate ``layout.slot`` (lambda^-1) inline."""
+        other lowerings evaluate ``layout.slot`` (lambda^-1) inline.
+        ``block_shape`` is the *fine* block shape; the emitted spec's
+        block is the supertile."""
+        tile = self.supertile_shape(block_shape)
         if self.storage == "embedded":
-            return self.block_spec(block_shape, lambda bx, by: (by, bx))
-        layout = self.layout
+            return self.block_spec(tile, lambda bx, by: (by, bx))
         if self.lowering == "prefetch_lut":
             def im(*args):
                 *grid_ids, lut_ref = args
                 t = grid_ids[len(self.batch_dims)]
                 return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
+        elif self._tiling is not None:
+            tiling = self._tiling
+
+            def im(*grid_ids):
+                _, bx, by = self._decode(grid_ids)
+                tx, ty = tiling.tile_index(bx, by)
+                return ty, tx
         else:
+            layout = self.layout
+
             def im(*grid_ids):
                 _, bx, by = self._decode(grid_ids)
                 sx, sy = layout.slot(bx, by)
                 return sy, sx
-        return pl.BlockSpec(block_shape, im)
+        return pl.BlockSpec(tile, im)
 
     def neighbor_spec(self, block_shape, j: int) -> pl.BlockSpec:
-        """BlockSpec for the j-th halo operand (N/S/W/E order of
-        ``compact.NEIGHBOR_OFFSETS``): the embedded neighbour block
-        clamped into range, or -- under compact storage -- its
-        lambda^-1-resolved packed slot (slot (0, 0) for out-of-range /
-        non-member neighbours; the kernel masks those contributions)."""
-        from .compact import NEIGHBOR_OFFSETS
-        dx, dy = NEIGHBOR_OFFSETS[j]
+        """BlockSpec for the j-th halo operand
+        (``compact.NEIGHBOR_OFFSETS8`` order, j in [0, 8): N/S/W/E then
+        the corners): the embedded neighbour (super)block clamped into
+        range, or -- under compact storage -- its lambda^-1-resolved
+        packed slot (slot (0, 0) for out-of-range / non-member
+        neighbours; the kernel masks those contributions)."""
+        from .compact import NEIGHBOR_OFFSETS8
+        dx, dy = NEIGHBOR_OFFSETS8[j]
+        tile = self.supertile_shape(block_shape)
         if self.storage == "embedded":
-            nbx, nby = self.domain.bounding_box
+            nbx, nby = self.sched_domain.bounding_box
 
             def place(bx, by):
                 return (jnp.clip(by + dy, 0, nby - 1),
                         jnp.clip(bx + dx, 0, nbx - 1))
-            return self.block_spec(block_shape, place)
-        layout = self.layout
+            return self.block_spec(tile, place)
         if self.lowering == "prefetch_lut":
             def im(*args):
                 *grid_ids, lut_ref = args
                 t = grid_ids[len(self.batch_dims)]
                 return (lut_ref[t, _LUT_NBR + 3 * j + 1],
                         lut_ref[t, _LUT_NBR + 3 * j])
+        elif self._tiling is not None:
+            tiling = self._tiling
+
+            def im(*grid_ids):
+                _, bx, by = self._decode(grid_ids)
+                tx, ty, _ok = tiling.neighbor_tile(bx, by, dx, dy)
+                return ty, tx
         else:
+            layout = self.layout
+
             def im(*grid_ids):
                 _, bx, by = self._decode(grid_ids)
                 sx, sy, _ok = layout.neighbor_slot(bx, by, dx, dy)
                 return sy, sx
-        return pl.BlockSpec(block_shape, im)
+        return pl.BlockSpec(tile, im)
 
     # -- in-kernel accessor -------------------------------------------------
 
@@ -297,8 +408,8 @@ class GridPlan:
         batch, bx, by = self._decode(grid_ids, lut_ref)
         valid = None
         if self.lowering == "bounding" and not getattr(
-                self.domain, "always_member", False):
-            valid = self.domain.contains(bx, by)
+                self.sched_domain, "always_member", False):
+            valid = self.sched_domain.contains(bx, by)
         first = grid_ids[0] == 0
         for g in grid_ids[1:]:
             first = first & (g == 0)

@@ -1,0 +1,438 @@
+"""Persisted autotuner over the block-space scheduling axes.
+
+Navarro et al. ("Efficient GPU Thread Mapping on Embedded 2D Fractals",
+2020) show the best realization of the fractal map is configuration
+dependent: which of the lowerings wins flips with problem size, block
+geometry and hardware.  This module searches the axes the execution
+engine exposes -- ``lowering x storage x block x fuse x coarsen`` --
+measures each viable candidate with the same wall-clock harness the
+benchmarks use, and persists the winner to a JSON cache keyed by
+``(kernel, domain, n, backend)`` so a serving process pays the search
+once per configuration, ever.
+
+Two consumption paths:
+
+* explicit: ``autotune_ca / autotune_write / autotune_flash`` run the
+  search and return the winning config dict (``--autotune`` on the
+  examples and benchmarks);
+* implicit: the kernel entry points accept ``grid_mode="auto"`` (and
+  ``fuse="auto"`` / ``coarsen="auto"`` where they exist), which is a
+  cache *lookup only* -- never a measurement -- falling back to the
+  defaults when no tuned entry exists.  Lookup happens in the un-jitted
+  entry wrappers so a fresh tuning run is picked up by the next call,
+  not pinned by jit's static-argument cache.
+
+The cache file defaults to ``~/.cache/repro-tune.json`` and is
+overridden by the ``REPRO_TUNE_CACHE`` environment variable (CI points
+it at a workspace path).  Writes are atomic (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Callable, Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+
+CACHE_ENV = "REPRO_TUNE_CACHE"
+
+#: measurement defaults: enough to get a stable median without making
+#: a full search take minutes in interpret mode.
+MEASURE_WARMUP = 1
+MEASURE_ITERS = 3
+
+
+def default_cache_path() -> str:
+    return os.environ.get(CACHE_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-tune.json")
+
+
+class TuneCache:
+    """JSON-persisted map from tuning key to winning config.
+
+    Entries are ``{"config": {...}, "us": float, "tuned_at": epoch}``
+    keyed by the sorted-JSON of ``{"kernel": ..., **params}``.  The
+    backend is always part of ``params`` (a CPU winner must never leak
+    onto TPU), enforced by :func:`autotune` / :func:`best` rather than
+    trusted to callers.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data = None
+
+    @staticmethod
+    def key(kernel: str, params: dict) -> str:
+        return json.dumps({"kernel": kernel, **params}, sort_keys=True)
+
+    def _load(self) -> dict:
+        if self._data is None:
+            self._data = {}
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                if isinstance(data, dict):
+                    self._data = data
+            except (OSError, ValueError):
+                pass  # missing or corrupt cache == empty cache
+        return self._data
+
+    def get(self, kernel: str, params: dict) -> Optional[dict]:
+        entry = self._load().get(self.key(kernel, params))
+        return dict(entry["config"]) if entry else None
+
+    def put(self, kernel: str, params: dict, config: dict, us: float,
+            save: bool = True) -> None:
+        self._load()[self.key(kernel, params)] = {
+            "config": dict(config), "us": round(float(us), 2),
+            "tuned_at": time.time()}
+        if save:
+            self.save()
+
+    def save(self) -> None:
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tune.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._load(), f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+_DEFAULT: Optional[TuneCache] = None
+
+
+def default_cache() -> TuneCache:
+    """Process-wide cache bound to the current default path (re-made
+    when REPRO_TUNE_CACHE changes, so tests can redirect it)."""
+    global _DEFAULT
+    path = default_cache_path()
+    if _DEFAULT is None or _DEFAULT.path != path:
+        _DEFAULT = TuneCache(path)
+    return _DEFAULT
+
+
+def _with_backend(params: dict) -> dict:
+    p = dict(params)
+    p.setdefault("backend", jax.default_backend())
+    return p
+
+
+def measure(fn: Callable, *args, warmup: int = MEASURE_WARMUP,
+            iters: int = MEASURE_ITERS) -> float:
+    """Median wall-clock microseconds per call (the benchmarks'
+    ``time_fn``, re-stated here so the tuner has no benchmark-package
+    dependency and hillclimb can reuse one measurement path)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    if out is not None:
+        jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(samples))
+
+
+def autotune(kernel: str, params: dict, candidates: Iterable[dict],
+             build: Callable[[dict], Callable], *,
+             cache: Optional[TuneCache] = None, force: bool = False,
+             warmup: int = MEASURE_WARMUP, iters: int = MEASURE_ITERS,
+             verbose: bool = False):
+    """Generic search: measure every viable candidate, persist the winner.
+
+    ``build(config)`` returns a zero-arg measurable callable, or raises
+    ValueError / NotImplementedError to declare the candidate inviable
+    for this problem (e.g. fuse > supertile, coarsen on a non-fractal
+    domain) -- inviable candidates are skipped, not errors.
+
+    Returns ``(config, us, trials)`` where trials is the full
+    [(config, us)] measurement log (the hillclimb table rides on it).
+    """
+    cache = cache if cache is not None else default_cache()
+    params = _with_backend(params)
+    if not force:
+        hit = cache.get(kernel, params)
+        if hit is not None:
+            return hit, None, []
+    trials = []
+    best_cfg, best_us = None, float("inf")
+    for cfg in candidates:
+        try:
+            fn = build(cfg)
+        except (ValueError, NotImplementedError) as e:
+            if verbose:
+                print(f"  skip {cfg}: {e}")
+            continue
+        us = measure(fn, warmup=warmup, iters=iters)
+        trials.append((dict(cfg), us))
+        if verbose:
+            print(f"  {cfg} -> {us:.1f} us")
+        if us < best_us:
+            best_cfg, best_us = dict(cfg), us
+    if best_cfg is None:
+        raise ValueError(f"autotune({kernel}): no viable candidate "
+                         f"for {params}")
+    cache.put(kernel, params, best_cfg, best_us)
+    return best_cfg, best_us, trials
+
+
+def best(kernel: str, params: dict, default: Optional[dict] = None,
+         cache: Optional[TuneCache] = None) -> Optional[dict]:
+    """Cache lookup only (the ``grid_mode='auto'`` path): the tuned
+    config for this (kernel, params, backend), or ``default``."""
+    cache = cache if cache is not None else default_cache()
+    hit = cache.get(kernel, _with_backend(params))
+    return hit if hit is not None else default
+
+
+# ---------------------------------------------------------------------------
+# Kernel-specific search spaces + searchers.  Each synthesizes its own
+# operands (random state masked to the fractal / random qkv), so callers
+# only describe the problem; the returned config is then passed to the
+# real entry points.
+# ---------------------------------------------------------------------------
+
+#: the full (unrestricted) storage axis.  A search restricted to a
+#: subset gets its own cache key (see :func:`_axis_param`): its winner
+#: prescribes a storage, so it must never answer -- or overwrite -- the
+#: unrestricted key the kernels' ``grid_mode="auto"`` lookups use.
+ALL_STORAGES = ("embedded", "compact")
+ALL_FLASH_BLOCKS = (64, 128, 256)
+
+
+def _axis_param(params: dict, name: str, value, full) -> dict:
+    """Stamp a candidate-axis restriction into the cache key params
+    when (and only when) it deviates from the full default axis."""
+    if tuple(sorted(map(str, value))) != tuple(sorted(map(str, full))):
+        params[name] = "+".join(sorted(map(str, value)))
+    return params
+
+def _fuse_axis(block: int, coarsen: int, max_fuse: int) -> Sequence[int]:
+    """Fuse depths to try: powers of two up to min(max_fuse, supertile
+    side) -- the fused halo ring must fit inside one neighbour tile."""
+    out, f = [], 1
+    while f <= min(max_fuse, block * coarsen):
+        out.append(f)
+        f *= 2
+    return out
+
+
+def _coarsen_axis(fractal: str, n: int, block: int,
+                  max_coarsen: int) -> Sequence[int]:
+    from . import fractal as F
+    m = 2 if fractal in ("sierpinski", "sierpinski-gasket") \
+        else F.FRACTALS[fractal].m
+    out, s = [], 1
+    while s <= max_coarsen and (n // block) % s == 0 and s < n // block:
+        out.append(s)
+        s *= m
+    return out or [1]
+
+
+def ca_candidates(fractal: str, n: int, block: int, *,
+                  storages=("embedded", "compact"), max_fuse: int = 8,
+                  max_coarsen: int = 4):
+    from .plan import LOWERINGS
+    for storage in storages:
+        for lowering in LOWERINGS:
+            for coarsen in _coarsen_axis(fractal, n, block, max_coarsen):
+                for fuse in _fuse_axis(block, coarsen, max_fuse):
+                    yield {"lowering": lowering, "storage": storage,
+                           "fuse": fuse, "coarsen": coarsen}
+
+
+def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
+                block: int = 16, rule: str = "parity", steps: int = 8,
+                storages=ALL_STORAGES, max_fuse: int = 8,
+                max_coarsen: int = 4, cache: Optional[TuneCache] = None,
+                force: bool = False, interpret: Optional[bool] = None,
+                verbose: bool = False):
+    """Search the CA scheduling axes for (fractal, n, block, rule)."""
+    from .compact import CompactLayout
+    from .domain import make_fractal_domain
+    from repro.kernels.sierpinski_ca import ca_run
+
+    dom = make_fractal_domain(fractal, n // block)
+    mask = np.zeros((n, n), bool)
+    y, x = np.mgrid[0:n, 0:n]
+    mask[:] = np.asarray(dom.cell_member(x, y, n))
+    rng = np.random.default_rng(0)
+    state = (rng.integers(0, 2, (n, n)) * mask).astype(np.float32)
+    import jax.numpy as jnp
+    operands = {"embedded": (jnp.asarray(state), jnp.zeros((n, n),
+                                                           jnp.float32))}
+    if "compact" in storages:
+        lay = CompactLayout(dom)
+        operands["compact"] = (lay.pack(operands["embedded"][0], block),
+                               lay.pack(operands["embedded"][1], block))
+
+    def build(cfg):
+        a, b = operands[cfg["storage"]]
+
+        def fn():
+            return ca_run(a, b, steps, rule=rule, block=block,
+                          grid_mode=cfg["lowering"],
+                          storage=cfg["storage"], n=n, fuse=cfg["fuse"],
+                          coarsen=cfg["coarsen"], interpret=interpret,
+                          donate=False)
+        return fn
+
+    params = _axis_param(
+        {"fractal": fractal, "n": n, "block": block, "rule": rule},
+        "storages", storages, ALL_STORAGES)
+    cands = ca_candidates(fractal, n, block, storages=storages,
+                          max_fuse=max_fuse, max_coarsen=max_coarsen)
+    return autotune("ca", params, cands, build, cache=cache, force=force,
+                    verbose=verbose)
+
+
+def write_candidates(fractal: str, n: int, block: int, *,
+                     storages=("embedded", "compact"),
+                     max_coarsen: int = 4):
+    from .plan import LOWERINGS
+    for storage in storages:
+        for lowering in LOWERINGS:
+            for coarsen in _coarsen_axis(fractal, n, block, max_coarsen):
+                yield {"lowering": lowering, "storage": storage,
+                       "coarsen": coarsen}
+
+
+def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
+                   block: int = 16, storages=ALL_STORAGES,
+                   max_coarsen: int = 4,
+                   cache: Optional[TuneCache] = None, force: bool = False,
+                   interpret: Optional[bool] = None,
+                   verbose: bool = False):
+    """Search lowering x storage x coarsen for the write microbenchmark."""
+    from .compact import CompactLayout
+    from .domain import make_fractal_domain
+    from repro.kernels.sierpinski_write import sierpinski_write
+    import jax.numpy as jnp
+
+    dom = make_fractal_domain(fractal, n // block)
+    operands = {"embedded": jnp.zeros((n, n), jnp.float32)}
+    if "compact" in storages:
+        operands["compact"] = CompactLayout(dom).pack(
+            operands["embedded"], block)
+
+    def build(cfg):
+        m = operands[cfg["storage"]]
+
+        def fn():
+            return sierpinski_write(m, 1.0, block=block,
+                                    grid_mode=cfg["lowering"],
+                                    storage=cfg["storage"], n=n,
+                                    coarsen=cfg["coarsen"],
+                                    interpret=interpret)
+        return fn
+
+    params = _axis_param({"fractal": fractal, "n": n, "block": block},
+                         "storages", storages, ALL_STORAGES)
+    cands = write_candidates(fractal, n, block, storages=storages,
+                             max_coarsen=max_coarsen)
+    return autotune("write", params, cands, build, cache=cache,
+                    force=force, verbose=verbose)
+
+
+def flash_candidates(sq: int, sk: int, *, blocks=ALL_FLASH_BLOCKS):
+    from .plan import LOWERINGS
+    for lowering in LOWERINGS:
+        for b in blocks:
+            if b <= min(sq, sk) and sq % b == 0 and sk % b == 0:
+                yield {"lowering": lowering, "block_q": b, "block_k": b}
+
+
+def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
+                   kv_heads: Optional[int] = None, sq: int = 1024,
+                   sk: Optional[int] = None, d: int = 64, window: int = 0,
+                   blocks=(64, 128, 256), cache: Optional[TuneCache] = None,
+                   force: bool = False, interpret: Optional[bool] = None,
+                   verbose: bool = False):
+    """Search lowering x block geometry for the flash-attention kernel."""
+    from repro.kernels.flash_attention import flash_attention
+    import jax.numpy as jnp
+
+    sk = sq if sk is None else sk
+    kv_heads = heads if kv_heads is None else kv_heads
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(batch, heads, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(batch, kv_heads, sk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(batch, kv_heads, sk, d)), jnp.float32)
+
+    def build(cfg):
+        def fn():
+            return flash_attention(q, k, v, kind=kind, window=window,
+                                   block_q=cfg["block_q"],
+                                   block_k=cfg["block_k"],
+                                   grid_mode=cfg["lowering"],
+                                   interpret=interpret)
+        return fn
+
+    params = _axis_param(
+        {"kind": kind, "batch": batch, "heads": heads,
+         "kv_heads": kv_heads, "sq": sq, "sk": sk, "d": d,
+         "window": window},
+        "blocks", blocks, ALL_FLASH_BLOCKS)
+    return autotune("flash", params, flash_candidates(sq, sk,
+                                                      blocks=blocks),
+                    build, cache=cache, force=force, verbose=verbose)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: a deliberately tiny search so CI can exercise the full
+# measure -> persist -> reload path in seconds (interpret mode).
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny search space (CI)")
+    ap.add_argument("--cache", default=None, help="cache file path")
+    ap.add_argument("--force", action="store_true",
+                    help="re-measure even on a cache hit")
+    args = ap.parse_args(argv)
+    cache = TuneCache(args.cache) if args.cache else default_cache()
+    if args.smoke:
+        n, block, max_fuse, max_coarsen, blocks = 32, 8, 2, 2, (32,)
+        sq = 64
+    else:
+        n, block, max_fuse, max_coarsen, blocks = 256, 16, 8, 4, (64, 128)
+        sq = 512
+    for name, fn in (
+        ("ca", lambda: autotune_ca(n=n, block=block, max_fuse=max_fuse,
+                                   max_coarsen=max_coarsen, cache=cache,
+                                   force=args.force, verbose=True)),
+        ("write", lambda: autotune_write(n=n, block=block,
+                                         max_coarsen=max_coarsen,
+                                         cache=cache, force=args.force,
+                                         verbose=True)),
+        ("flash", lambda: autotune_flash(sq=sq, d=32, blocks=blocks,
+                                         cache=cache, force=args.force,
+                                         verbose=True)),
+    ):
+        cfg, us, trials = fn()
+        tag = f"{us:.1f} us, {len(trials)} trials" if us is not None \
+            else "cache hit"
+        print(f"{name}: best={cfg} ({tag})")
+    # reload through a fresh cache object to prove the persistence path
+    fresh = TuneCache(cache.path)
+    print(f"cache {cache.path}: {len(fresh)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,4 +5,5 @@
 # Each kernel module has its pure-jnp oracle in ref.py and its public
 # jit'd wrapper re-exported via ops.py.
 from . import ref
-from .ops import ca_step, flash_attention, sierpinski_sum, sierpinski_write
+from .ops import (ca_run, ca_step, flash_attention, launch_schedule,
+                  sierpinski_sum, sierpinski_write)

@@ -113,29 +113,8 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
     "storage", "kv_seq_len", "interpret"))
-def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
-                    scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, grid_mode: str = "compact",
-                    storage: str = "embedded",
-                    kv_seq_len: int | None = None,
-                    interpret: bool | None = None):
-    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
-
-    kind:      "causal" | "local" (window tokens) | "full"
-    grid_mode: "closed_form" (alias "compact": the paper's block-space
-               map) | "prefetch_lut" (scalar-prefetch table decode) |
-               "bounding" (baseline full grid + run-time discard)
-    storage:   "embedded" (k/v hold the full key sequence) | "compact"
-               (k/v hold only the domain's key-block support, packed;
-               see :func:`repro.core.compact.pack_kv`).  When the
-               support is a strict suffix (rectangular local), pass the
-               true key length as ``kv_seq_len``.
-    causal requires Sq == Sk; local accepts Sq < Sk with the decode
-    convention (queries are the last Sq positions) when
-    Sk - Sq >= window (full window per query block).
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
+                grid_mode, storage, kv_seq_len, interpret):
     b, h, sq, d = q.shape
     _, hkv, sk_arr, _ = k.shape
     group = h // hkv
@@ -204,3 +183,47 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
         interpret=interpret,
     )
     return call(q, k, v)
+
+
+def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
+                    scale: float | None = None,
+                    block_q: int | str = 128, block_k: int | str = 128,
+                    grid_mode: str = "compact",
+                    storage: str = "embedded",
+                    kv_seq_len: int | None = None,
+                    interpret: bool | None = None):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
+
+    kind:      "causal" | "local" (window tokens) | "full"
+    grid_mode: "closed_form" (alias "compact": the paper's block-space
+               map) | "prefetch_lut" (scalar-prefetch table decode) |
+               "bounding" (baseline full grid + run-time discard) |
+               "auto" (resolve the tuned lowering -- and tuned block
+               geometry, when block_q/block_k are left at "auto" --
+               from the :mod:`~repro.core.tune` cache)
+    storage:   "embedded" (k/v hold the full key sequence) | "compact"
+               (k/v hold only the domain's key-block support, packed;
+               see :func:`repro.core.compact.pack_kv`).  When the
+               support is a strict suffix (rectangular local), pass the
+               true key length as ``kv_seq_len``.
+    causal requires Sq == Sk; local accepts Sq < Sk with the decode
+    convention (queries are the last Sq positions) when
+    Sk - Sq >= window (full window per query block).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    from .sierpinski_write import resolve_auto_schedule
+    b, h, sq, d = q.shape
+    _, hkv, _, _ = k.shape
+    sk = kv_seq_len if kv_seq_len is not None else k.shape[2]
+    grid_mode, block_q, block_k = resolve_auto_schedule(
+        "flash",
+        {"kind": kind, "batch": b, "heads": h, "kv_heads": hkv,
+         "sq": sq, "sk": sk, "d": d, "window": window},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        block_q=(block_q, "block_q", 128),
+        block_k=(block_k, "block_k", 128))
+    return _flash_impl(q, k, v, kind=kind, window=window, scale=scale,
+                       block_q=block_q, block_k=block_k,
+                       grid_mode=grid_mode, storage=storage,
+                       kv_seq_len=kv_seq_len, interpret=interpret)

@@ -5,8 +5,8 @@ compiled Mosaic on TPU.  All wrappers are thin -- the kernels themselves
 live in their own modules with their oracles in ``ref.py``.
 """
 from .flash_attention import flash_attention
-from .sierpinski_ca import ca_step
+from .sierpinski_ca import ca_run, ca_step, launch_schedule
 from .sierpinski_write import sierpinski_sum, sierpinski_write
 
-__all__ = ["flash_attention", "ca_step", "sierpinski_sum",
-           "sierpinski_write"]
+__all__ = ["flash_attention", "ca_run", "ca_step", "launch_schedule",
+           "sierpinski_sum", "sierpinski_write"]

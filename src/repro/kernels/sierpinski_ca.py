@@ -1,22 +1,47 @@
-"""Cellular-automaton / diffusion step on an embedded fractal, as a
-block-space Pallas kernel (the application class the paper motivates:
-nearest-neighbour data-parallel simulation over the fractal).
+"""Cellular-automaton / diffusion stepping on an embedded fractal, as a
+temporally-fused block-space Pallas kernel (the application class the
+paper motivates: nearest-neighbour data-parallel simulation over the
+fractal).
 
-Halo exchange: the kernel receives five views of the state array (center
-+ N/S/W/E neighbour tiles) via five BlockSpecs emitted by the plan.
+One launch advances a (super)block by up to ``fuse`` steps: the kernel
+assembles the block plus a ``fuse``-cell halo ring from the 8 neighbour
+tiles (corners matter from the second step on, when the dependency
+footprint grows past the von-Neumann cross), then advances the classic
+*shrinking trapezoid* in an in-kernel ``fori_loop`` -- after k
+iterations the outer k rings of the working array are stale, and after
+``fuse`` iterations the interior block is exact.  The per-launch step
+count is a run-time SMEM scalar, so the final partial launch of a
+``steps % fuse`` remainder reuses the same trace.
+
+:func:`ca_run` drives T steps as ``ceil(T / fuse)`` such launches
+inside a single jitted ``lax.scan`` with rotating double buffers: one
+trace and ceil(T/fuse) launches total, where the old driver paid T
+launches and (first call) T Python dispatches.  :func:`ca_step` is the
+``steps=1`` special case and keeps its original signature.
+
+Halo exchange: the kernel receives nine views of the state array
+(center + 8 neighbour supertiles) via BlockSpecs emitted by the plan.
 Under ``storage="embedded"`` the neighbour index_maps are the decoded
-block coordinate shifted by +-1 (clamped); under ``storage="compact"``
-the state lives in the packed orthotope layout and each neighbour
-index_map resolves the *embedded* neighbour's packed slot through
-lambda^-1 (inline for closed_form / bounding, or as an O(1) read of the
-host-built neighbour-slot table shipped through the scalar-prefetch LUT).
-Out-of-range and non-member neighbour tiles are masked in-kernel.
+block coordinate shifted (clamped); under ``storage="compact"`` the
+state lives in the packed orthotope layout and each neighbour index_map
+resolves the *embedded* neighbour's packed slot through lambda^-1
+(inline for closed_form / bounding, or as an O(1) read of the
+host-built 8-neighbour slot table shipped through the scalar-prefetch
+LUT).  Out-of-range and non-member neighbour tiles are masked
+in-kernel at fine-block granularity (matching the unfused kernel's
+semantics exactly, so fused and per-step runs are bit-identical).
+
+Superblock coarsening composes: ``coarsen=s`` makes the center tile an
+s x s superblock (lambda decoded once per superblock); under compact
+storage the supertile arrives in packed fine-block arrangement and the
+kernel permutes it through the plan's static ``tile_map`` before
+stencilling.
 
 All three GridPlan lowerings apply: the compact ones visit only member
 blocks; a *stale* buffer (zeros outside the fractal) is aliased to the
-output so unvisited blocks stay zero -- the classic double-buffer CA
-scheme, which is what keeps the compact grids applicable to stencils,
-not just pointwise writes.
+output so unvisited blocks stay zero -- the double-buffer CA scheme
+that keeps the compact grids applicable to stencils, not just
+pointwise writes.
 """
 from __future__ import annotations
 
@@ -24,96 +49,277 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compact import NEIGHBOR_OFFSETS8
 from repro.core.domain import BlockDomain
 from repro.core.plan import GridPlan
-from .sierpinski_write import _cell_mask, resolve_storage_args
+from .sierpinski_write import resolve_auto_schedule, resolve_storage_args
+
+#: trace/build telemetry the schedule-equivalence tests read: "kernel"
+#: counts fused-kernel body traces, "build" counts pallas_call
+#: constructions.  A T-step ca_run must bump each exactly once.
+TRACE_COUNTER = {"kernel": 0, "build": 0}
 
 
-def _ca_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, buf_ref, o_ref,
-               *, rule, alpha, block, n, domain):
-    bx, by = coords.bx, coords.by
-    nbx, nby = domain.bounding_box
-    nx, ny = nbx * block, nby * block
+def auto_schedule(*, fractal: str = "sierpinski-gasket", n: int,
+                  block: int, rule: str = "parity",
+                  grid_mode: str = "auto", fuse: int | str = "auto",
+                  coarsen: int | str = "auto"):
+    """Resolve the (grid_mode, fuse, coarsen) schedule for a CA problem
+    from the tune cache -- the exact lookup :func:`ca_run` /
+    :func:`ca_step` perform, exposed so drivers can report the schedule
+    they are about to run without re-deriving the cache key."""
+    return resolve_auto_schedule(
+        "ca",
+        {"fractal": fractal, "n": n, "block": block, "rule": rule},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        fuse=(fuse, "fuse", 1),
+        coarsen=(coarsen, "coarsen", 1))
 
-    def nbr_ok(dx, dy):
-        # halo contributions need the neighbour *block* to be in range
-        # AND a domain member: under compact storage a non-member
-        # neighbour has no slot (its spec was clamped to slot (0, 0)),
-        # and under embedded storage its tile is all zero by the CA
-        # invariant -- the mask makes both storages read identically.
-        x, y = bx + dx, by + dy
-        inr = (x >= 0) & (x < nbx) & (y >= 0) & (y < nby)
-        return inr & domain.contains(jnp.clip(x, 0, nbx - 1),
-                                     jnp.clip(y, 0, nby - 1))
+
+def effective_fuse(fuse: int, steps: int, block: int,
+                   coarsen: int = 1) -> int:
+    """The fuse depth :func:`ca_run` actually executes: clamped so the
+    halo ring fits one neighbour supertile (``coarsen * block``) and
+    never exceeds the step count."""
+    return max(1, min(int(fuse), coarsen * block,
+                      steps if steps else 1))
+
+
+def launch_schedule(steps: int, fuse: int) -> list:
+    """Per-launch step counts for T steps at fuse depth k:
+    ``ceil(T/k)`` launches of k steps, the last carrying the
+    remainder."""
+    steps, fuse = int(steps), int(fuse)
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
+    if fuse < 1:
+        raise ValueError(f"fuse must be >= 1, got {fuse}")
+    full, rem = divmod(steps, fuse)
+    return [fuse] * full + ([rem] if rem else [])
+
+
+def _ca_fused_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, nw_ref,
+                     ne_ref, sw_ref, se_ref, buf_ref, steps_ref, o_ref,
+                     *, rule, alpha, block, n, plan, halo):
+    """Advance one (super)block by ``steps_ref[0] <= halo`` CA steps."""
+    TRACE_COUNTER["kernel"] += 1
+    domain = plan.domain
+    span = plan.coarsen * block        # embedded superblock side, cells
+    h = halo
+    wid = span + 2 * h                 # working (trapezoid base) side
+    bx, by = coords.bx, coords.by      # scheduled (coarse) block coords
+    nbr_refs = (n_ref, s_ref, w_ref, e_ref, nw_ref, ne_ref, sw_ref,
+                se_ref)
+    tm = plan.tile_map()
+
+    def embed(t):
+        """Packed supertile -> embedded arrangement (identity when the
+        storage tile is already embedded-ordered)."""
+        if tm is None:
+            return t
+        e = jnp.zeros((span, span), t.dtype)
+        for (py, px), (ey, ex) in tm:
+            e = jax.lax.dynamic_update_slice(
+                e, t[py * block:(py + 1) * block,
+                     px * block:(px + 1) * block],
+                (ey * block, ex * block))
+        return e
+
+    def unembed(e):
+        if tm is None:
+            return e
+        p = jnp.zeros(plan.supertile_shape((block, block)), e.dtype)
+        for (py, px), (ey, ex) in tm:
+            p = jax.lax.dynamic_update_slice(
+                p, e[ey * block:(ey + 1) * block,
+                     ex * block:(ex + 1) * block],
+                (py * block, px * block))
+        return p
+
+    # strip geometry: which rows/cols of a neighbour's embedded view
+    # land where in the padded working array (relative offset -1/0/+1)
+    _SPANS = {-1: (span - h, 0, h), 0: (0, h, span), 1: (0, span + h, h)}
 
     def body():
-        c = c_ref[...]
-        north = jnp.where(nbr_ok(0, -1), n_ref[block - 1:block, :], 0)
-        south = jnp.where(nbr_ok(0, 1), s_ref[0:1, :], 0)
-        west = jnp.where(nbr_ok(-1, 0), w_ref[:, block - 1:block], 0)
-        east = jnp.where(nbr_ok(1, 0), e_ref[:, 0:1], 0)
+        P = jnp.zeros((wid, wid), c_ref.dtype)
+        P = jax.lax.dynamic_update_slice(P, embed(c_ref[...]), (h, h))
+        for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
+            e = embed(nbr_refs[j][...])
+            r_src, r_dst, nr = _SPANS[dy]
+            c_src, c_dst, nc = _SPANS[dx]
+            P = jax.lax.dynamic_update_slice(
+                P, e[r_src:r_src + nr, c_src:c_src + nc], (r_dst, c_dst))
 
-        up = jnp.concatenate([north, c[:-1, :]], axis=0)
-        down = jnp.concatenate([c[1:, :], south], axis=0)
-        left = jnp.concatenate([west, c[:, :-1]], axis=1)
-        right = jnp.concatenate([c[:, 1:], east], axis=1)
-        nsum = up + down + left + right
+        iy = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 0)
+        ix = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 1)
+        gx = bx * span - h + ix
+        gy = by * span - h + iy
+        inr = (gx >= 0) & (gx < n) & (gy >= 0) & (gy < n)
+        gxc = jnp.clip(gx, 0, n - 1)
+        gyc = jnp.clip(gy, 0, n - 1)
+        # contributions are discarded at fine-*block* granularity (the
+        # unfused kernel's nbr_ok), values at *cell* granularity: a
+        # member block's non-member cells pass raw into the first
+        # neighbour sum (zero by the CA invariant) and are re-zeroed by
+        # the output mask every step.
+        cell_ok = inr & domain.cell_member(gxc, gyc, n)
+        block_ok = inr & domain.contains(gxc // block, gyc // block)
+        P = jnp.where(block_ok, P, 0)
 
-        member = _cell_mask(domain, bx, by, block, n)
+        zrow = jnp.zeros((1, wid), P.dtype)
+        zcol = jnp.zeros((wid, 1), P.dtype)
+
+        def nsum_of(a):
+            up = jnp.concatenate([zrow.astype(a.dtype), a[:-1, :]], 0)
+            down = jnp.concatenate([a[1:, :], zrow.astype(a.dtype)], 0)
+            left = jnp.concatenate([zcol.astype(a.dtype), a[:, :-1]], 1)
+            right = jnp.concatenate([a[:, 1:], zcol.astype(a.dtype)], 1)
+            return up + down + left + right
+
         if rule == "parity":
-            new = jnp.mod(c + nsum, 2)
+            def one(pv):
+                return jnp.where(cell_ok, jnp.mod(pv + nsum_of(pv), 2), 0)
         else:  # diffusion: graph Laplacian over member neighbours
-            iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
-            ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
-            gx = bx * block + ix
-            gy = by * block + iy
+            deg = nsum_of(cell_ok.astype(P.dtype))
+            al = jnp.asarray(alpha, P.dtype)
 
-            def nbr_member(dx, dy):
-                x, y = gx + dx, gy + dy
-                inside = (x >= 0) & (x < nx) & (y >= 0) & (y < ny)
-                return (inside & domain.cell_member(x, y, n)).astype(c.dtype)
+            def one(pv):
+                new = pv + al * (nsum_of(pv) - deg * pv)
+                return jnp.where(cell_ok, new, 0)
 
-            deg = (nbr_member(0, -1) + nbr_member(0, 1) +
-                   nbr_member(-1, 0) + nbr_member(1, 0))
-            new = c + jnp.asarray(alpha, c.dtype) * (nsum - deg * c)
-        o_ref[...] = jnp.where(member, new, 0).astype(o_ref.dtype)
+        steps = steps_ref[0]
+        P2 = jax.lax.fori_loop(0, steps, lambda i, pv: one(pv), P)
+        out = P2[h:h + span, h:h + span]
+        o_ref[...] = unembed(out).astype(o_ref.dtype)
 
     coords.when_valid(body)
 
 
-@functools.partial(jax.jit, static_argnames=("rule", "alpha", "block",
-                                             "grid_mode", "fractal",
-                                             "storage", "n", "domain",
-                                             "interpret"))
+def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
+                  interpret):
+    """One fused pallas_call: (state, stale, steps[1]) -> new state."""
+    TRACE_COUNTER["build"] += 1
+    tile = plan.storage_spec((block, block))
+    in_specs = [tile]
+    in_specs += [plan.neighbor_spec((block, block), j) for j in range(8)]
+    in_specs += [tile]                                 # stale buffer
+    in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM)]  # step count
+    call = plan.pallas_call(
+        functools.partial(_ca_fused_kernel, rule=rule, alpha=alpha,
+                          block=block, n=n, plan=plan, halo=halo),
+        in_specs=in_specs,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct(shape, dtype),
+        input_output_aliases={9: 0},
+        interpret=interpret,
+    )
+
+    def launch(a, b, steps_scalar):
+        return call(a, a, a, a, a, a, a, a, a, b, steps_scalar)
+    return launch
+
+
+def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
+                 grid_mode, fractal, storage, n, domain, coarsen,
+                 interpret):
+    domain, n, block, storage = resolve_storage_args(
+        state, block, fractal, storage, n, domain)
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
+    fuse = effective_fuse(fuse, steps, block, plan.coarsen)
+    sched = launch_schedule(steps, fuse)
+    if not sched:
+        return state
+    launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
+                           n=n, halo=fuse, shape=state.shape,
+                           dtype=state.dtype, interpret=interpret)
+
+    def body(carry, per_launch):
+        a, b = carry
+        new = launch(a, b, jnp.reshape(per_launch, (1,)))
+        return (new, a), None
+
+    (a, _), _ = jax.lax.scan(body, (state, stale_buf),
+                             jnp.asarray(sched, jnp.int32))
+    return a
+
+
+_CA_STATIC = ("steps", "fuse", "rule", "alpha", "block", "grid_mode",
+              "fractal", "storage", "n", "domain", "coarsen", "interpret")
+_CA_RUN_JIT = {
+    False: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC),
+    True: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC,
+                  donate_argnums=(0, 1)),
+}
+
+
+def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
+           fuse: int | str = "auto", rule: str = "parity",
+           alpha: float = 0.25, block: int = 128,
+           grid_mode: str = "compact",
+           fractal: str = "sierpinski-gasket",
+           storage: str = "embedded", n: int | None = None,
+           domain: BlockDomain | None = None, coarsen: int | str = 1,
+           interpret: bool | None = None,
+           donate: bool | None = None) -> jnp.ndarray:
+    """Advance the CA ``steps`` steps and return the final state.
+
+    ``fuse=k`` executes k steps per kernel launch (one in-kernel
+    trapezoid loop), so the whole run costs ceil(steps/k) launches
+    driven by a single jitted ``lax.scan`` -- bit-identical to
+    ``steps`` sequential :func:`ca_step` calls.  ``fuse`` is clamped to
+    ``coarsen * block`` (the halo ring must fit one neighbour
+    supertile) and to ``steps`` -- see :func:`effective_fuse`.
+    ``fuse="auto"`` / ``grid_mode="auto"`` / ``coarsen="auto"`` resolve
+    from the :mod:`~repro.core.tune` cache (defaults: 1 / closed_form /
+    1; see :func:`auto_schedule`).
+
+    ``stale_buf`` must be zero outside the fractal (the double-buffer
+    invariant); both buffers are donated on accelerators unless
+    ``donate=False``.  Under ``storage="compact"`` both arrays are
+    packed orthotope-resident (pass ``n=`` or ``domain=``)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid_mode, fuse, coarsen = resolve_auto_schedule(
+        "ca",
+        {"fractal": fractal, "n": n or state.shape[0], "block": block,
+         "rule": rule},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        fuse=(fuse, "fuse", 1),
+        coarsen=(coarsen, "coarsen", 1))
+    if donate is None:
+        donate = not interpret and jax.default_backend() != "cpu"
+    return _CA_RUN_JIT[bool(donate)](
+        state, stale_buf, steps=int(steps), fuse=fuse, rule=rule,
+        alpha=alpha, block=block, grid_mode=grid_mode, fractal=fractal,
+        storage=storage, n=n, domain=domain, coarsen=coarsen,
+        interpret=interpret)
+
+
 def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             rule: str = "parity", alpha: float = 0.25, block: int = 128,
             grid_mode: str = "compact",
             fractal: str = "sierpinski-gasket",
             storage: str = "embedded", n: int | None = None,
-            domain: BlockDomain | None = None,
+            domain: BlockDomain | None = None, coarsen: int | str = 1,
             interpret: bool | None = None) -> jnp.ndarray:
-    """One CA step.  ``stale_buf`` must be zero outside the fractal (e.g.
-    the state from two steps ago, or zeros); it is donated as the output
-    buffer so unvisited blocks remain valid.  Under storage="compact"
-    both arrays are packed orthotope-resident (pass n= or domain=)."""
+    """One CA step (the ``steps=1`` slice of :func:`ca_run`).
+
+    ``stale_buf`` must be zero outside the fractal (e.g. the state from
+    two steps ago, or zeros); it is aliased to the output buffer so
+    blocks a compact grid never visits remain valid."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    domain, n, block, storage = resolve_storage_args(
-        state, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage)
-
-    center = plan.storage_spec((block, block))
-    in_specs = [center]
-    in_specs += [plan.neighbor_spec((block, block), j) for j in range(4)]
-    in_specs += [center]                               # stale double buffer
-    call = plan.pallas_call(
-        functools.partial(_ca_kernel, rule=rule, alpha=alpha, block=block,
-                          n=n, domain=domain),
-        in_specs=in_specs,
-        out_specs=center,
-        out_shape=jax.ShapeDtypeStruct(state.shape, state.dtype),
-        input_output_aliases={5: 0},
-        interpret=interpret,
-    )
-    return call(state, state, state, state, state, stale_buf)
+    grid_mode, coarsen = resolve_auto_schedule(
+        "ca",
+        {"fractal": fractal, "n": n or state.shape[0], "block": block,
+         "rule": rule},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        coarsen=(coarsen, "coarsen", 1))
+    return _CA_RUN_JIT[False](
+        state, stale_buf, steps=1, fuse=1, rule=rule, alpha=alpha,
+        block=block, grid_mode=grid_mode, fractal=fractal,
+        storage=storage, n=n, domain=domain, coarsen=coarsen,
+        interpret=interpret)

@@ -13,6 +13,9 @@ follow-up work:
   table read instead of the O(r) digit unrolling.
 * ``bounding`` -- the bounding-box baseline: n_b x n_b grid steps, with
   the run-time discard ``pl.when(block is member)``.
+* ``auto`` -- resolve the lowering (and coarsening, when left at
+  ``"auto"``) from the :mod:`~repro.core.tune` cache for this problem
+  and backend; falls back to ``closed_form`` when never tuned.
 
 Two storages (the ``storage=`` axis of GridPlan):
 
@@ -23,10 +26,16 @@ Two storages (the ``storage=`` axis of GridPlan):
   of Lemma 2 (O(n^H) memory, ``CompactLayout``); the same kernels run
   with their storage-operand index maps rewritten to packed slots.
 
+Superblock coarsening (the ``coarsen=`` axis): each grid step owns an
+s x s tile of fine blocks -- lambda decoded once per superblock, the
+per-cell embedded offsets baked into the (static) supertile offset
+grids -- amortizing the decode by the tile's member count.
+
 Intra-block threads use the paper's *bounding sub-boxes* option: a VPU
-mask from ``broadcasted_iota`` evaluating the domain's cell-membership
-test (the gasket's ``x & (n-1-y) == 0`` bit test, or the generalized
-base-m digit test for carpet / Vicsek / any registered FractalSpec).
+mask from ``broadcasted_iota`` (or, under packed coarsening, the static
+offset grids) evaluating the domain's cell-membership test (the
+gasket's ``x & (n-1-y) == 0`` bit test, or the generalized base-m digit
+test for carpet / Vicsek / any registered FractalSpec).
 """
 from __future__ import annotations
 
@@ -99,8 +108,25 @@ def resolve_storage_args(m, block, fractal, storage, n, domain):
     return domain, n, block, storage
 
 
+def resolve_auto_schedule(kernel: str, params: dict, **knobs):
+    """Resolve ``"auto"`` scheduling knobs from the tune cache.
+
+    ``knobs`` maps knob name -> (current value, config key, default);
+    returns the knob values with every ``"auto"`` replaced by the tuned
+    value (or the default when this problem was never tuned).  Values
+    the caller fixed explicitly are passed through untouched, so a
+    tuned lowering never overrides an explicit ``coarsen=``.
+    """
+    if not any(v == "auto" for v, _, _ in knobs.values()):
+        return tuple(v for v, _, _ in knobs.values())
+    from repro.core import tune
+    cfg = tune.best(kernel, params) or {}
+    return tuple(cfg.get(key, default) if value == "auto" else value
+                 for value, key, default in knobs.values())
+
+
 def _cell_mask(domain: BlockDomain, bx, by, block: int, n: int):
-    """VPU cell-membership mask for the (bx, by) tile (bounding
+    """VPU cell-membership mask for the (bx, by) fine tile (bounding
     sub-boxes intra-block option); (bx, by) are embedded block coords
     under either storage."""
     iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
@@ -110,9 +136,37 @@ def _cell_mask(domain: BlockDomain, bx, by, block: int, n: int):
     return domain.cell_member(gx, gy, n)
 
 
-def _write_kernel(coords, m_ref, o_ref, *, value, block, n, domain):
+def _tile_mask(plan: GridPlan, bx, by, block: int, n: int):
+    """Cell-membership mask over one storage supertile of the plan.
+
+    (bx, by) are the *scheduled* (coarse) block coords.  For the
+    trivial layouts this is exactly :func:`_cell_mask`; under packed
+    coarsening the static offset grids bake the fine-block permutation
+    in, so the mask is evaluated directly in packed arrangement."""
+    span = plan.coarsen * block
+    tm = plan.tile_map()
+    th, tw = plan.supertile_shape((block, block))
+    if tm is None:
+        oy = jax.lax.broadcasted_iota(jnp.int32, (th, tw), 0)
+        ox = jax.lax.broadcasted_iota(jnp.int32, (th, tw), 1)
+        return plan.domain.cell_member(bx * span + ox, by * span + oy, n)
+    # packed coarsening: evaluate per fine sub-block (static loop over
+    # the tile permutation -- Pallas kernels cannot capture host array
+    # constants, so the offsets enter as scalar adds on iota)
+    iy = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
+    mask = jnp.zeros((th, tw), jnp.bool_)
+    for (py, px), (ey, ex) in tm:
+        sub = plan.domain.cell_member(bx * span + ex * block + ix,
+                                      by * span + ey * block + iy, n)
+        mask = jax.lax.dynamic_update_slice(mask, sub,
+                                            (py * block, px * block))
+    return mask
+
+
+def _write_kernel(coords, m_ref, o_ref, *, value, block, n, plan):
     def body():
-        mask = _cell_mask(domain, coords.bx, coords.by, block, n)
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
         o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype),
                                m_ref[...])
 
@@ -122,29 +176,17 @@ def _write_kernel(coords, m_ref, o_ref, *, value, block, n, domain):
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
-                                    "interpret"))
-def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
-                     block: int = 128, grid_mode: str = "compact",
-                     fractal: str = "sierpinski-gasket",
-                     storage: str = "embedded", n: int | None = None,
-                     domain: BlockDomain | None = None,
-                     interpret: bool | None = None) -> jnp.ndarray:
-    """Write ``value`` to every fractal cell of the (n, n) state.
-
-    grid_mode: closed_form (alias compact) | prefetch_lut | bounding;
-    fractal: any registered FractalSpec name; storage: embedded (m is
-    the dense n x n array) | compact (m is the packed orthotope array,
-    pass n= or domain=)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+                                    "coarsen", "interpret"))
+def _write_impl(m, value, *, block, grid_mode, fractal, storage, n,
+                domain, coarsen, interpret):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage)
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
 
     spec = plan.storage_spec((block, block))
     call = plan.pallas_call(
         functools.partial(_write_kernel, value=value, block=block, n=n,
-                          domain=domain),
+                          plan=plan),
         in_specs=[spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
@@ -154,13 +196,40 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
     return call(m)
 
 
-def _sum_kernel(coords, m_ref, o_ref, *, block, n, domain):
+def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
+                     block: int = 128, grid_mode: str = "compact",
+                     fractal: str = "sierpinski-gasket",
+                     storage: str = "embedded", n: int | None = None,
+                     domain: BlockDomain | None = None,
+                     coarsen: int | str = 1,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Write ``value`` to every fractal cell of the (n, n) state.
+
+    grid_mode: closed_form (alias compact) | prefetch_lut | bounding |
+    auto (tune-cache lookup); fractal: any registered FractalSpec name;
+    storage: embedded (m is the dense n x n array) | compact (m is the
+    packed orthotope array, pass n= or domain=); coarsen: superblock
+    side in fine blocks (or "auto")."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid_mode, coarsen = resolve_auto_schedule(
+        "write",
+        {"fractal": fractal, "n": n or m.shape[0], "block": block},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        coarsen=(coarsen, "coarsen", 1))
+    return _write_impl(m, value, block=block, grid_mode=grid_mode,
+                       fractal=fractal, storage=storage, n=n,
+                       domain=domain, coarsen=coarsen,
+                       interpret=interpret)
+
+
+def _sum_kernel(coords, m_ref, o_ref, *, block, n, plan):
     @pl.when(coords.first_step)
     def _():
         o_ref[...] = jnp.zeros_like(o_ref)
 
     def body():
-        mask = _cell_mask(domain, coords.bx, coords.by, block, n)
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
         tile = jnp.where(mask, m_ref[...], 0).astype(jnp.float32)
         o_ref[0, 0] += jnp.sum(tile)
 
@@ -169,29 +238,45 @@ def _sum_kernel(coords, m_ref, o_ref, *, block, n, domain):
 
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
                                              "fractal", "storage", "n",
-                                             "domain", "interpret"))
-def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
-                   grid_mode: str = "compact",
-                   fractal: str = "sierpinski-gasket",
-                   storage: str = "embedded", n: int | None = None,
-                   domain: BlockDomain | None = None,
-                   interpret: bool | None = None) -> jnp.ndarray:
-    """f32 sum over fractal cells, sequential accumulate over the plan's
-    grid (any lowering; the output block is revisited every step).  The
-    grid enumeration -- and therefore the accumulation order -- depends
-    only on (domain, grid_mode), so compact and embedded storage are
-    bit-identical per lowering."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+                                             "domain", "coarsen",
+                                             "interpret"))
+def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
+              coarsen, interpret):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage)
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
 
     call = plan.pallas_call(
-        functools.partial(_sum_kernel, block=block, n=n, domain=domain),
+        functools.partial(_sum_kernel, block=block, n=n, plan=plan),
         in_specs=[plan.storage_spec((block, block))],
         out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
         interpret=interpret,
     )
     return call(m)[0, 0]
+
+
+def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
+                   grid_mode: str = "compact",
+                   fractal: str = "sierpinski-gasket",
+                   storage: str = "embedded", n: int | None = None,
+                   domain: BlockDomain | None = None,
+                   coarsen: int | str = 1,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """f32 sum over fractal cells, sequential accumulate over the plan's
+    grid (any lowering; the output block is revisited every step).  The
+    grid enumeration -- and therefore the accumulation order -- depends
+    only on (domain, grid_mode), so compact and embedded storage are
+    bit-identical per lowering.  ``coarsen`` changes the per-step
+    reduction tile, so coarsened sums agree to float tolerance, not
+    bit-exactly."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid_mode, coarsen = resolve_auto_schedule(
+        "write",
+        {"fractal": fractal, "n": n or m.shape[0], "block": block},
+        grid_mode=(grid_mode, "lowering", "closed_form"),
+        coarsen=(coarsen, "coarsen", 1))
+    return _sum_impl(m, block=block, grid_mode=grid_mode, fractal=fractal,
+                     storage=storage, n=n, domain=domain, coarsen=coarsen,
+                     interpret=interpret)

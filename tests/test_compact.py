@@ -162,11 +162,12 @@ def test_compact_lut_carries_slots_and_neighbors():
     dom = make_fractal_domain("sierpinski-gasket", 8)
     plan = GridPlan(dom, "prefetch_lut", storage="compact")
     lut = np.asarray(plan.lut())
-    assert lut.shape == (dom.num_blocks, 16)
+    # 2 coords + 2 own-slot + 8 (sx, sy, valid) neighbour triples
+    assert lut.shape == (dom.num_blocks, 28)
     np.testing.assert_array_equal(lut[:, :2], dom.coords_host())
     np.testing.assert_array_equal(lut[:, 2:4], plan.layout.slots_host())
     np.testing.assert_array_equal(
-        lut[:, 4:], plan.layout.neighbor_slots_host().reshape(-1, 12))
+        lut[:, 4:], plan.layout.neighbor_slots_host().reshape(-1, 24))
 
 
 def test_cell_neighbor_tables_match_dense_lookup():
@@ -446,7 +447,7 @@ def test_write_alias_none_vs_empty_consistent(grid_mode):
     outs = []
     for aliases in (None, {}):
         call = plan.pallas_call(
-            ft.partial(_sum_kernel, block=4, n=32, domain=dom),
+            ft.partial(_sum_kernel, block=4, n=32, plan=plan),
             in_specs=[plan.storage_spec((4, 4))],
             out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
             out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),

@@ -1,0 +1,401 @@
+"""Schedule-equivalence and autotuner tests for the fused block-space
+scheduling layer (PR 3).
+
+Covered:
+  * temporal fusion: ``ca_run(steps=T, fuse=k)`` is bit-identical to T
+    sequential ``ca_step`` calls, across lowerings, storages, rules and
+    non-dividing remainders, with ceil(T/k) launches from ONE trace;
+  * superblock coarsening: ``coarsen=s`` plans are bit-identical to
+    ``coarsen=1`` for write and CA (elementwise kernels) and
+    float-close for sum (reduction tile changes), across all three
+    lowerings and both storages; invalid coarsenings raise;
+  * autotuner: cache round-trips through the JSON file, respects
+    backend keys, skips inviable candidates, and the kernels'
+    ``grid_mode="auto"`` path resolves from it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fractal as F
+from repro.core import tune
+from repro.core.compact import NEIGHBOR_OFFSETS8, CompactLayout, SuperTiling
+from repro.core.domain import (SierpinskiDomain, TriangularDomain,
+                               make_fractal_domain)
+from repro.core.plan import LOWERINGS, GridPlan
+from repro.kernels import ops
+from repro.kernels import sierpinski_ca as ca_mod
+
+RNG = np.random.default_rng(7)
+
+
+def _fractal_state(fractal, n, binary=False):
+    dom = make_fractal_domain(fractal, n)
+    y, x = np.mgrid[0:n, 0:n]
+    mask = np.asarray(dom.cell_member(x, y, n))
+    vals = RNG.integers(0, 2, (n, n)) if binary else \
+        RNG.normal(size=(n, n))
+    return jnp.asarray(np.where(mask, vals, 0), jnp.float32), mask
+
+
+def _seq_ca(a, b, steps, **kw):
+    for _ in range(steps):
+        new = ops.ca_step(a, b, **kw)
+        b, a = a, new
+    return a
+
+
+# ---------------------------------------------------------------------------
+# launch schedule arithmetic
+# ---------------------------------------------------------------------------
+
+def test_launch_schedule_math():
+    assert ops.launch_schedule(10, 4) == [4, 4, 2]
+    assert ops.launch_schedule(8, 4) == [4, 4]
+    assert ops.launch_schedule(3, 8) == [3]
+    assert ops.launch_schedule(0, 4) == []
+    for steps in range(0, 23):
+        for fuse in range(1, 9):
+            sched = ops.launch_schedule(steps, fuse)
+            assert len(sched) == -(-steps // fuse)  # ceil(T/k) launches
+            assert sum(sched) == steps
+    with pytest.raises(ValueError):
+        ops.launch_schedule(4, 0)
+    with pytest.raises(ValueError):
+        ops.launch_schedule(-1, 2)
+
+
+def test_ca_run_single_trace_for_remainder_schedule():
+    # 10 steps at fuse=4 -> [4, 4, 2]: the remainder launch must reuse
+    # the same kernel build (per-launch step count is a run-time
+    # scalar), so exactly one pallas_call is constructed.
+    n, block = 16, 4
+    a, _ = _fractal_state("sierpinski-gasket", n, binary=True)
+    b = jnp.zeros_like(a)
+    before = dict(ca_mod.TRACE_COUNTER)
+    got = ops.ca_run(a, b, 10, fuse=4, rule="parity", block=block,
+                     alpha=0.125)  # unique alpha: defeat jit reuse
+    assert ca_mod.TRACE_COUNTER["build"] == before["build"] + 1
+    assert ca_mod.TRACE_COUNTER["kernel"] == before["kernel"] + 1
+    want = _seq_ca(a, b, 10, rule="parity", block=block, alpha=0.125)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# temporal fusion: bit-identity with the sequential driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gm", LOWERINGS)
+@pytest.mark.parametrize("storage", ["embedded", "compact"])
+@pytest.mark.parametrize("rule", ["parity", "diffusion"])
+def test_fused_ca_bit_identical_to_sequential(gm, storage, rule):
+    n, block, steps = 32, 8, 5
+    a, _ = _fractal_state("sierpinski-gasket", n, binary=rule == "parity")
+    b = jnp.zeros_like(a)
+    if storage == "compact":
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        a, b = lay.pack(a, block), lay.pack(b, block)
+    kw = dict(rule=rule, block=block, grid_mode=gm, storage=storage, n=n)
+    want = np.asarray(_seq_ca(a, b, steps, **kw))
+    for fuse in (1, 2, 4, 8):  # 5 % 2, 5 % 4: remainder launches
+        got = np.asarray(ops.ca_run(a, b, steps, fuse=fuse, **kw))
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fractal,n,block",
+                         [("sierpinski-carpet", 27, 3),
+                          ("vicsek-cross", 27, 3)])
+def test_fused_ca_generalized_fractals(fractal, n, block):
+    a, _ = _fractal_state(fractal, n, binary=True)
+    b = jnp.zeros_like(a)
+    kw = dict(rule="parity", block=block, fractal=fractal)
+    want = np.asarray(_seq_ca(a, b, 4, **kw))
+    got = np.asarray(ops.ca_run(a, b, 4, fuse=3, **kw))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ca_run_zero_steps_is_identity():
+    a, _ = _fractal_state("sierpinski-gasket", 16, binary=True)
+    out = ops.ca_run(a, jnp.zeros_like(a), 0, fuse=4, block=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a))
+
+
+# ---------------------------------------------------------------------------
+# superblock coarsening: bit-identity with coarsen=1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gm", LOWERINGS)
+@pytest.mark.parametrize("storage", ["embedded", "compact"])
+@pytest.mark.parametrize("coarsen", [2, 4])
+def test_coarsened_write_bit_identical(gm, storage, coarsen):
+    n, block = 32, 4
+    m, _ = _fractal_state("sierpinski-gasket", n)
+    lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                            n // block))
+    arr = lay.pack(m, block) if storage == "compact" else m
+    kw = dict(block=block, grid_mode=gm, storage=storage, n=n)
+    want = np.asarray(ops.sierpinski_write(arr, 7.0, **kw))
+    got = np.asarray(ops.sierpinski_write(arr, 7.0, coarsen=coarsen,
+                                          **kw))
+    np.testing.assert_array_equal(got, want)
+    s = float(ops.sierpinski_sum(arr, **kw))
+    sc = float(ops.sierpinski_sum(arr, coarsen=coarsen, **kw))
+    # coarsening changes the reduction tile, so only float-close
+    np.testing.assert_allclose(sc, s, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("gm", LOWERINGS)
+@pytest.mark.parametrize("storage", ["embedded", "compact"])
+def test_coarsened_fused_ca_bit_identical(gm, storage):
+    n, block, steps = 32, 4, 4
+    a, _ = _fractal_state("sierpinski-gasket", n, binary=True)
+    b = jnp.zeros_like(a)
+    if storage == "compact":
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        a, b = lay.pack(a, block), lay.pack(b, block)
+    kw = dict(rule="parity", block=block, grid_mode=gm, storage=storage,
+              n=n)
+    want = np.asarray(_seq_ca(a, b, steps, **kw))
+    for coarsen, fuse in ((2, 1), (2, 3), (4, 4)):
+        got = np.asarray(ops.ca_run(a, b, steps, fuse=fuse,
+                                    coarsen=coarsen, **kw))
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("fractal,n,block,coarsen",
+                         [("sierpinski-carpet", 27, 3, 3),
+                          ("vicsek-cross", 27, 3, 3)])
+def test_coarsened_write_generalized(fractal, n, block, coarsen):
+    m, _ = _fractal_state(fractal, n)
+    want = np.asarray(ops.sierpinski_write(m, 3.0, block=block,
+                                           fractal=fractal))
+    got = np.asarray(ops.sierpinski_write(m, 3.0, block=block,
+                                          fractal=fractal,
+                                          coarsen=coarsen))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_coarsen_validation():
+    with pytest.raises(ValueError):  # not a fractal domain
+        GridPlan(TriangularDomain(6), coarsen=2)
+    with pytest.raises(ValueError):  # not a power of m=2
+        GridPlan(SierpinskiDomain(8), coarsen=3)
+    with pytest.raises(ValueError):  # coarser than the whole grid
+        GridPlan(SierpinskiDomain(8), coarsen=16)
+    with pytest.raises(ValueError):
+        GridPlan(SierpinskiDomain(8), coarsen=0)
+    # identity coarsening needs no fractal structure
+    assert GridPlan(TriangularDomain(6), coarsen=1).coarsen == 1
+
+
+def test_supertiling_geometry_matches_layout():
+    # the packed sub-rectangle of every coarse block must be exactly
+    # the fine layout's slots for its members
+    dom = SierpinskiDomain(16)
+    st = SuperTiling(dom, 4)
+    lay = CompactLayout(dom)
+    bw, bh = st.sub_shape
+    assert bw * bh == st.members_per_tile
+    emb2slot = {tuple(c): tuple(s) for c, s in
+                zip(dom.coords_host(), lay.slots_host())}
+    for CX, CY in st.coarse.coords_host():
+        tx, ty = st.tile_index(int(CX), int(CY))
+        for (oy, ox), (ey, ex) in st.tile_map():
+            fine = (int(CX) * 4 + ex, int(CY) * 4 + ey)
+            assert emb2slot[fine] == (int(tx) * bw + ox,
+                                      int(ty) * bh + oy)
+
+
+def test_coarsened_lut_one_row_per_superblock():
+    dom = SierpinskiDomain(16)
+    plan = GridPlan(dom, "prefetch_lut", storage="compact", coarsen=4)
+    lut = np.asarray(plan.lut())
+    assert lut.shape == (plan.sched_domain.num_blocks, 28)
+    assert plan.sched_domain.num_blocks * 9 == dom.num_blocks
+    tiling = plan._tiling
+    np.testing.assert_array_equal(lut[:, 2:4], tiling.tiles_host())
+    np.testing.assert_array_equal(
+        lut[:, 4:], tiling.neighbor_tiles_host().reshape(-1, 24))
+
+
+def test_cell_offset_grids_match_tile_map():
+    dom = SierpinskiDomain(8)
+    block = 4
+    for storage, coarsen in (("embedded", 2), ("compact", 1),
+                             ("compact", 2), ("compact", 4)):
+        plan = GridPlan(dom, storage=storage, coarsen=coarsen)
+        oy, ox = plan.cell_offset_grids(block)
+        assert oy.shape == ox.shape == plan.supertile_shape((block, block))
+        tm = plan.tile_map()
+        if tm is None:
+            want_y, want_x = np.mgrid[0:oy.shape[0], 0:oy.shape[1]]
+            np.testing.assert_array_equal(oy, want_y)
+            np.testing.assert_array_equal(ox, want_x)
+        else:
+            for (py, px), (ey, ex) in tm:
+                sub_y = oy[py * block:(py + 1) * block,
+                           px * block:(px + 1) * block]
+                sub_x = ox[py * block:(py + 1) * block,
+                           px * block:(px + 1) * block]
+                cy, cx = np.mgrid[0:block, 0:block]
+                np.testing.assert_array_equal(sub_y, ey * block + cy)
+                np.testing.assert_array_equal(sub_x, ex * block + cx)
+
+
+def test_neighbor_offsets8_prefix_is_von_neumann():
+    from repro.core.compact import NEIGHBOR_OFFSETS
+    assert NEIGHBOR_OFFSETS8[:4] == NEIGHBOR_OFFSETS
+    assert set(NEIGHBOR_OFFSETS8) == {(dx, dy) for dx in (-1, 0, 1)
+                                      for dy in (-1, 0, 1)} - {(0, 0)}
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+def test_tune_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "tune.json")
+    c = tune.TuneCache(path)
+    params = {"n": 64, "backend": "cpu"}
+    assert c.get("ca", params) is None
+    c.put("ca", params, {"lowering": "prefetch_lut", "fuse": 4}, 123.4)
+    assert c.get("ca", params) == {"lowering": "prefetch_lut", "fuse": 4}
+    # a fresh object must read the persisted file
+    fresh = tune.TuneCache(path)
+    assert fresh.get("ca", params) == {"lowering": "prefetch_lut",
+                                       "fuse": 4}
+    assert len(fresh) == 1
+
+
+def test_tune_cache_respects_backend_keys(tmp_path):
+    c = tune.TuneCache(str(tmp_path / "tune.json"))
+    c.put("ca", {"n": 64, "backend": "tpu"}, {"lowering": "bounding"}, 1.0)
+    c.put("ca", {"n": 64, "backend": "cpu"}, {"lowering": "closed_form"},
+          2.0)
+    assert c.get("ca", {"n": 64, "backend": "tpu"}) == \
+        {"lowering": "bounding"}
+    # best() stamps the *current* backend into unqualified params
+    assert tune.best("ca", {"n": 64}, cache=c) == \
+        {"lowering": "closed_form" if jax.default_backend() == "cpu"
+         else "bounding"}
+    assert tune.best("ca", {"n": 9999}, {"lowering": "x"}, cache=c) == \
+        {"lowering": "x"}
+
+
+def test_tune_cache_tolerates_corrupt_file(tmp_path):
+    path = tmp_path / "tune.json"
+    path.write_text("{not json")
+    c = tune.TuneCache(str(path))
+    assert c.get("ca", {"n": 1, "backend": "cpu"}) is None
+    c.put("ca", {"n": 1, "backend": "cpu"}, {"fuse": 2}, 1.0)
+    assert tune.TuneCache(str(path)).get(
+        "ca", {"n": 1, "backend": "cpu"}) == {"fuse": 2}
+
+
+def test_autotune_picks_min_and_caches(tmp_path, monkeypatch):
+    c = tune.TuneCache(str(tmp_path / "tune.json"))
+    fake_us = {"a": 30.0, "b": 10.0, "c": 20.0}
+    monkeypatch.setattr(tune, "measure",
+                        lambda fn, *a, **k: fake_us[fn()])
+
+    def build(cfg):
+        if cfg["name"] == "inviable":
+            raise ValueError("cannot build")
+        return lambda: cfg["name"]
+
+    cands = [{"name": k} for k in ("a", "inviable", "b", "c")]
+    cfg, us, trials = tune.autotune("k", {"n": 1}, cands, build, cache=c)
+    assert cfg == {"name": "b"} and us == 10.0 and len(trials) == 3
+    # second call is a pure cache hit: no measurement
+    monkeypatch.setattr(tune, "measure",
+                        lambda *a, **k: pytest.fail("measured on hit"))
+    cfg2, us2, trials2 = tune.autotune("k", {"n": 1}, cands, build,
+                                       cache=c)
+    assert cfg2 == {"name": "b"} and us2 is None and trials2 == []
+
+
+def test_autotune_no_viable_candidate_raises(tmp_path):
+    c = tune.TuneCache(str(tmp_path / "tune.json"))
+
+    def build(cfg):
+        raise ValueError("nope")
+    with pytest.raises(ValueError, match="no viable"):
+        tune.autotune("k", {"n": 2}, [{"a": 1}], build, cache=c)
+
+
+def test_grid_mode_auto_resolves_from_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv(tune.CACHE_ENV, str(tmp_path / "tune.json"))
+    n, block = 16, 4
+    a, _ = _fractal_state("sierpinski-gasket", n, binary=True)
+    b = jnp.zeros_like(a)
+    want = np.asarray(ops.ca_step(a, b, block=block))
+    # untuned: auto falls back to the closed_form default
+    got = np.asarray(ops.ca_step(a, b, block=block, grid_mode="auto"))
+    np.testing.assert_array_equal(got, want)
+    # tuned: auto adopts the cached lowering/fuse/coarsen
+    tune.default_cache().put(
+        "ca", tune._with_backend({"fractal": "sierpinski-gasket", "n": n,
+                                  "block": block, "rule": "parity"}),
+        {"lowering": "prefetch_lut", "storage": "embedded", "fuse": 2,
+         "coarsen": 2}, 1.0)
+    got = np.asarray(ops.ca_run(a, b, 4, fuse="auto", grid_mode="auto",
+                                coarsen="auto", block=block))
+    np.testing.assert_array_equal(
+        got, np.asarray(_seq_ca(a, b, 4, block=block)))
+    # explicit values are never overridden by the cache
+    got = np.asarray(ops.ca_run(a, b, 4, fuse=1, grid_mode="bounding",
+                                coarsen=1, block=block))
+    np.testing.assert_array_equal(
+        got, np.asarray(_seq_ca(a, b, 4, block=block)))
+
+
+def test_restricted_search_gets_its_own_cache_key(tmp_path):
+    # an embedded-only search must not answer (or be answered by) the
+    # unrestricted key that grid_mode="auto" lookups use, nor a search
+    # restricted to the other storage
+    c = tune.TuneCache(str(tmp_path / "tune.json"))
+    kw = dict(n=16, block=8, steps=2, max_fuse=1, max_coarsen=1, cache=c)
+    cfg_e, us_e, tr_e = tune.autotune_ca(storages=("embedded",), **kw)
+    assert us_e is not None
+    assert all(t["storage"] == "embedded" for t, _ in tr_e)
+    cfg_c, us_c, tr_c = tune.autotune_ca(storages=("compact",), **kw)
+    assert us_c is not None  # measured, not a cross-restriction hit
+    assert all(t["storage"] == "compact" for t, _ in tr_c)
+    assert tune.best("ca", {"fractal": "sierpinski-gasket", "n": 16,
+                            "block": 8, "rule": "parity"},
+                     cache=c) is None
+    # the full-axis search owns the unrestricted key
+    cfg, us, _ = tune.autotune_ca(storages=tune.ALL_STORAGES, **kw)
+    assert us is not None
+    assert tune.best("ca", {"fractal": "sierpinski-gasket", "n": 16,
+                            "block": 8, "rule": "parity"},
+                     cache=c) == cfg
+
+
+def test_effective_fuse_clamp():
+    from repro.kernels.sierpinski_ca import effective_fuse
+    assert effective_fuse(16, 10, 4) == 4        # halo <= block
+    assert effective_fuse(16, 10, 4, coarsen=2) == 8
+    assert effective_fuse(4, 3, 8) == 3          # never beyond steps
+    assert effective_fuse(0, 10, 8) == 1
+    assert effective_fuse(4, 0, 8) == 1
+
+
+def test_autotune_ca_end_to_end(tmp_path):
+    c = tune.TuneCache(str(tmp_path / "tune.json"))
+    cfg, us, trials = tune.autotune_ca(n=16, block=8, steps=2,
+                                       storages=("embedded",),
+                                       max_fuse=2, max_coarsen=1,
+                                       cache=c)
+    assert cfg["lowering"] in LOWERINGS
+    assert cfg["fuse"] in (1, 2) and cfg["coarsen"] == 1
+    assert us > 0 and len(trials) == 6  # 3 lowerings x 2 fuse depths
+    # and the kernels can consume the result directly
+    a, _ = _fractal_state("sierpinski-gasket", 16, binary=True)
+    out = ops.ca_run(a, jnp.zeros_like(a), 3, block=8,
+                     grid_mode=cfg["lowering"], fuse=cfg["fuse"],
+                     coarsen=cfg["coarsen"])
+    assert out.shape == a.shape
