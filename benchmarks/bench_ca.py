@@ -113,6 +113,66 @@ def run_sched_ab(iters: int = 3, steps: int = 16, cases=((128, 8),)):
             f"speedup_vs_bounding={t_bound / t_fc:.2f}")
 
 
+def run_shard_ab(iters: int = 3, steps: int = 8, cases=((128, 8),)):
+    """Mesh-scaling A/B: single-device ca_run vs the sharded run at
+    every power-of-two device count the host exposes (compact storage
+    slab-shards the orthotope with ppermute halos; embedded replicates
+    and psums).  Emits one row per (storage, D) with the per-device
+    state bytes next to the time; skipped on single-device hosts."""
+    ndev = jax.device_count()
+    if ndev < 2:
+        print("# ca_shard: single device, skipping mesh-scaling A/B")
+        return
+    print(f"# CA mesh-scaling A/B: sharded ca_run over 1..{ndev} "
+          f"devices (T={steps} parity steps)")
+    sizes = []
+    d = 2
+    while d <= ndev:
+        sizes.append(d)
+        d *= 2
+    for n, block in cases:
+        mask = F.membership_grid(n)
+        rng = np.random.default_rng(0)
+        a0 = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                         .astype(np.float32))
+        z0 = jnp.zeros_like(a0)
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        ap, zp = lay.pack(a0, block), lay.pack(z0, block)
+        for storage, (a, b) in (("embedded", (a0, z0)),
+                                ("compact", (ap, zp))):
+            base = time_fn(
+                lambda a, b: ops.ca_run(a, b, steps, fuse=1,
+                                        rule="parity", block=block,
+                                        grid_mode="closed_form",
+                                        storage=storage, n=n,
+                                        donate=False),
+                a, b, warmup=1, iters=iters)
+            bytes_dev = 2 * 4 * (lay.num_cells(block)
+                                 if storage == "compact" else n * n)
+            row(f"ca_shard/{storage}/D=1/n={n}/rho={block}", base,
+                f"bytes_per_device={bytes_dev};speedup=1.00")
+            for D in sizes:
+                mesh = jax.make_mesh((D,), ("data",))
+                t = time_fn(
+                    lambda a, b: ops.ca_run(a, b, steps, fuse=1,
+                                            rule="parity", block=block,
+                                            grid_mode="closed_form",
+                                            storage=storage, n=n,
+                                            mesh=mesh, donate=False),
+                    a, b, warmup=1, iters=iters)
+                if storage == "compact":
+                    from repro.core.shard import ShardedPlan
+                    plan = ShardedPlan(
+                        lay.domain, "closed_form", storage="compact",
+                        mesh=mesh, axis="data", halo=True)
+                    lh, lw = plan.local_storage_shape(block)
+                    bytes_dev = 2 * 4 * lh * lw
+                row(f"ca_shard/{storage}/D={D}/n={n}/rho={block}", t,
+                    f"bytes_per_device={bytes_dev};"
+                    f"speedup={base / t:.2f}")
+
+
 def run_kernel_storage_ab(iters: int = 5):
     """Pallas ca_step: embedded vs orthotope-resident compact storage."""
     print("# Pallas ca_step storage A/B (embedded n^2 vs compact n^H blocks)")

@@ -36,8 +36,30 @@ def row(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}")
 
 
+def run_metadata() -> dict:
+    """Environment stamp for a benchmark artifact, so the perf
+    trajectory stays attributable across machines: jax/jaxlib versions,
+    backend, device count and kinds, host platform and Python."""
+    import platform
+
+    import jaxlib
+    devs = jax.devices()
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_count": len(devs),
+        "device_kinds": sorted({d.device_kind for d in devs}),
+        "process_count": jax.process_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
 def dump_json(path: str):
-    """Write every row() recorded so far to ``path`` as a JSON list."""
+    """Write every row() recorded so far to ``path``:
+    ``{"meta": run_metadata(), "rows": [...]}``."""
     with open(path, "w") as f:
-        json.dump(RESULTS, f, indent=1)
+        json.dump({"meta": run_metadata(), "rows": RESULTS}, f, indent=1)
     print(f"# wrote {len(RESULTS)} rows to {path}")

@@ -10,7 +10,7 @@ import os
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: map,space,time,ca,sched,attn")
+                    help="comma list: map,space,time,ca,sched,shard,attn")
     ap.add_argument("--json", default=None,
                     help="artifact path (default: BENCH_<tag>.json at "
                          "the repo root)")
@@ -35,6 +35,8 @@ def main() -> None:
         bench_map_time.run()
     if only is None or "sched" in only:
         bench_ca.run_sched_ab()
+    if only is None or "shard" in only:
+        bench_ca.run_shard_ab()
     if only is None or "ca" in only:
         bench_ca.run(sched_ab=False)
     if only is None or "attn" in only:

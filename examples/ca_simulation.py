@@ -52,6 +52,11 @@ def main():
     ap.add_argument("--autotune", action="store_true",
                     help="search the schedule axes for this problem "
                          "first, persist the winner, and run with it")
+    ap.add_argument("--shard", type=int, default=0, metavar="D",
+                    help="shard the run over D devices (0 = single "
+                         "device; D devices must exist, e.g. via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=D on CPU)")
     args = ap.parse_args()
     n = args.n
     fuse = args.fuse if args.fuse == "auto" else int(args.fuse)
@@ -92,10 +97,23 @@ def main():
         print(f"orthotope-resident: {pk} cells ({4 * pk} B f32) instead "
               f"of {emb} ({4 * emb} B), x{emb / pk:.2f} smaller")
 
+    mesh = None
+    if args.shard:
+        import jax
+        if jax.device_count() < args.shard:
+            raise SystemExit(
+                f"--shard {args.shard} needs {args.shard} devices, have "
+                f"{jax.device_count()} (on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.shard})")
+        mesh = jax.make_mesh((args.shard,), ("data",))
+        print(f"sharded over {args.shard} devices "
+              f"({'orthotope row slabs + ppermute halo' if args.storage == 'compact' else 'replicated state, disjoint psum'})")
+
     total0 = float(jnp.sum(a))
     final = ops.ca_run(a, b, args.steps, fuse=fuse, rule=args.rule,
                        block=args.block, grid_mode=grid_mode,
-                       storage=args.storage, n=n, coarsen=coarsen)
+                       storage=args.storage, n=n, coarsen=coarsen,
+                       mesh=mesh)
     eff = sierpinski_ca.effective_fuse(fuse, args.steps, args.block,
                                        int(coarsen))
     launches = len(ops.launch_schedule(args.steps, eff))

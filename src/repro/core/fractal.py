@@ -206,6 +206,32 @@ class FractalSpec:
             ly = ly + dy * self.m ** (mu - 1)
         return lx, ly
 
+    def lambda_map(self, wx, wy, r: int):
+        """Generalized lambda over *orthotope* coords (w_x, w_y) ->
+        embedded fractal coords, the F^{k,s} analogue of module-level
+        :func:`lambda_map`: odd scale levels mu = 1, 3, ... consume
+        base-k digits of w_y, even levels of w_x (the Lemma 2
+        alternating unrolling).  Straight-line int math usable on host
+        ints/numpy and inside Pallas index maps; this is the decode the
+        sharded orthotope-row-slab enumeration runs (row-major over
+        packed slots instead of over the linear lambda order)."""
+        where = np.where if isinstance(wx, (int, np.integer, np.ndarray)) \
+            else jnp.where
+        lx = wx * 0
+        ly = wy * 0
+        for mu in range(1, r + 1):
+            if mu % 2 == 1:
+                c = (wy // self.k ** ((mu - 1) // 2)) % self.k
+            else:
+                c = (wx // self.k ** (mu // 2 - 1)) % self.k
+            dx, dy = c * 0, c * 0
+            for j, (ox, oy) in enumerate(self.offsets):
+                dx = where(c == j, ox, dx)
+                dy = where(c == j, oy, dy)
+            lx = lx + dx * self.m ** (mu - 1)
+            ly = ly + dy * self.m ** (mu - 1)
+        return lx, ly
+
     def lambda_inverse(self, x, y, r: int):
         """Inverse map: embedded fractal coords -> orthotope coords.
 

@@ -220,7 +220,24 @@ class GridPlan:
     def num_scalar_prefetch(self) -> int:
         return 1 if self.lowering == "prefetch_lut" else 0
 
+    def bound_prefetch(self):
+        """The scalar-prefetch operands ``pallas_call`` binds itself, or
+        ``None`` when the caller must supply them per call (the sharded
+        planner: its tables are per-device shard_map operands, not trace
+        constants)."""
+        return (self.lut(),) if self.num_scalar_prefetch else ()
+
+    @staticmethod
+    def _split_im_args(args, nsp: int):
+        """Split an index_map's ``(*grid_ids, *prefetch_refs)`` arg list."""
+        if nsp == 0:
+            return tuple(args), ()
+        return tuple(args[:-nsp]), tuple(args[-nsp:])
+
     def lut(self) -> jnp.ndarray:
+        return jnp.asarray(self.lut_host())
+
+    def lut_host(self) -> np.ndarray:
         """Host-built i32 decode table, one row per scheduled (member /
         coarse) block.
 
@@ -234,7 +251,7 @@ class GridPlan:
         fine block: that is the amortization)."""
         coords = self.sched_domain.coords_host()
         if self.storage == "embedded":
-            return jnp.asarray(coords)
+            return np.asarray(coords, np.int32)
         if self._tiling is not None:
             slots = self._tiling.tiles_host()
             nbrs = self._tiling.neighbor_tiles_host()
@@ -245,24 +262,32 @@ class GridPlan:
         table = np.concatenate([coords, slots, nbrs],
                                axis=1).astype(np.int32)
         assert table.shape[1] == _LUT_COLS
-        return jnp.asarray(table)
+        return table
 
     # -- the one shared decode ---------------------------------------------
 
-    def _decode(self, grid_ids, lut_ref=None):
+    def _decode(self, grid_ids, prefetch_refs=()):
         """grid step -> (batch_ids, bx, by) in the *scheduled* (coarse)
         block space.  Shared by every operand's index map and by the
-        kernel prologue."""
+        kernel prologue.  ``prefetch_refs`` holds the scalar-prefetch
+        refs in operand order (the LUT is the last one here; the sharded
+        planner prepends its per-device shard table)."""
         nb = len(self.batch_dims)
         batch = tuple(grid_ids[:nb])
         if self.lowering == "bounding":
             by, bx = grid_ids[nb], grid_ids[nb + 1]
         elif self.lowering == "prefetch_lut":
             t = grid_ids[nb]
+            lut_ref = prefetch_refs[-1]
             bx, by = lut_ref[t, 0], lut_ref[t, 1]
         else:  # closed_form
             bx, by = self.sched_domain.block_coords(grid_ids[nb])
         return batch, bx, by
+
+    def _place_coords(self, bx, by, prefetch_refs=()):
+        """The (bx, by) an operand's ``place`` callback receives; the
+        sharded planner localizes the row coordinate here."""
+        return bx, by
 
     # -- per-operand index maps --------------------------------------------
 
@@ -271,16 +296,14 @@ class GridPlan:
 
         ``place(bx, by, *batch_ids)`` returns the operand's block index
         tuple; the plan supplies the decoded coordinates with the arity
-        and extra scalar-ref argument each lowering requires."""
-        if self.lowering == "prefetch_lut":
-            def im(*args):
-                *grid_ids, lut_ref = args
-                batch, bx, by = self._decode(grid_ids, lut_ref)
-                return place(bx, by, *batch)
-        else:
-            def im(*grid_ids):
-                batch, bx, by = self._decode(grid_ids)
-                return place(bx, by, *batch)
+        and extra scalar-ref arguments each lowering requires."""
+        nsp = self.num_scalar_prefetch
+
+        def im(*args):
+            grid_ids, refs = self._split_im_args(args, nsp)
+            batch, bx, by = self._decode(grid_ids, refs)
+            bx, by = self._place_coords(bx, by, refs)
+            return place(bx, by, *batch)
         return im
 
     def block_spec(self, block_shape, place: Callable) -> pl.BlockSpec:
@@ -341,23 +364,27 @@ class GridPlan:
         tile = self.supertile_shape(block_shape)
         if self.storage == "embedded":
             return self.block_spec(tile, lambda bx, by: (by, bx))
+        nsp = self.num_scalar_prefetch
         if self.lowering == "prefetch_lut":
             def im(*args):
-                *grid_ids, lut_ref = args
+                grid_ids, refs = self._split_im_args(args, nsp)
                 t = grid_ids[len(self.batch_dims)]
+                lut_ref = refs[-1]
                 return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
         elif self._tiling is not None:
             tiling = self._tiling
 
-            def im(*grid_ids):
-                _, bx, by = self._decode(grid_ids)
+            def im(*args):
+                grid_ids, refs = self._split_im_args(args, nsp)
+                _, bx, by = self._decode(grid_ids, refs)
                 tx, ty = tiling.tile_index(bx, by)
                 return ty, tx
         else:
             layout = self.layout
 
-            def im(*grid_ids):
-                _, bx, by = self._decode(grid_ids)
+            def im(*args):
+                grid_ids, refs = self._split_im_args(args, nsp)
+                _, bx, by = self._decode(grid_ids, refs)
                 sx, sy = layout.slot(bx, by)
                 return sy, sx
         return pl.BlockSpec(tile, im)
@@ -379,41 +406,50 @@ class GridPlan:
                 return (jnp.clip(by + dy, 0, nby - 1),
                         jnp.clip(bx + dx, 0, nbx - 1))
             return self.block_spec(tile, place)
+        nsp = self.num_scalar_prefetch
         if self.lowering == "prefetch_lut":
             def im(*args):
-                *grid_ids, lut_ref = args
+                grid_ids, refs = self._split_im_args(args, nsp)
                 t = grid_ids[len(self.batch_dims)]
+                lut_ref = refs[-1]
                 return (lut_ref[t, _LUT_NBR + 3 * j + 1],
                         lut_ref[t, _LUT_NBR + 3 * j])
         elif self._tiling is not None:
             tiling = self._tiling
 
-            def im(*grid_ids):
-                _, bx, by = self._decode(grid_ids)
+            def im(*args):
+                grid_ids, refs = self._split_im_args(args, nsp)
+                _, bx, by = self._decode(grid_ids, refs)
                 tx, ty, _ok = tiling.neighbor_tile(bx, by, dx, dy)
                 return ty, tx
         else:
             layout = self.layout
 
-            def im(*grid_ids):
-                _, bx, by = self._decode(grid_ids)
+            def im(*args):
+                grid_ids, refs = self._split_im_args(args, nsp)
+                _, bx, by = self._decode(grid_ids, refs)
                 sx, sy, _ok = layout.neighbor_slot(bx, by, dx, dy)
                 return sy, sx
         return pl.BlockSpec(tile, im)
 
     # -- in-kernel accessor -------------------------------------------------
 
-    def kernel_coords(self, lut_ref=None) -> BlockCoords:
+    def kernel_coords(self, *prefetch_refs) -> BlockCoords:
         grid_ids = tuple(pl.program_id(i) for i in range(len(self.grid)))
-        batch, bx, by = self._decode(grid_ids, lut_ref)
-        valid = None
-        if self.lowering == "bounding" and not getattr(
-                self.sched_domain, "always_member", False):
-            valid = self.sched_domain.contains(bx, by)
+        batch, bx, by = self._decode(grid_ids, prefetch_refs)
+        valid = self._step_valid(grid_ids, bx, by, prefetch_refs)
         first = grid_ids[0] == 0
         for g in grid_ids[1:]:
             first = first & (g == 0)
         return BlockCoords(batch, bx, by, valid, first)
+
+    def _step_valid(self, grid_ids, bx, by, prefetch_refs=()):
+        """The membership/ownership predicate of one grid step (``None``
+        when every step is live)."""
+        if self.lowering == "bounding" and not getattr(
+                self.sched_domain, "always_member", False):
+            return self.sched_domain.contains(bx, by)
+        return None
 
     # -- pallas_call wrapper ------------------------------------------------
 
@@ -424,33 +460,43 @@ class GridPlan:
         """Wrap ``pl.pallas_call`` for this plan.
 
         ``kernel(coords, *refs)`` is lowering-agnostic; the wrapper
-        injects the decoded :class:`BlockCoords`, prepends the prefetch
-        table operand under ``prefetch_lut`` (shifting any
-        ``input_output_aliases`` accordingly), and selects the plain
-        grid vs ``PrefetchScalarGridSpec`` path."""
+        injects the decoded :class:`BlockCoords`, prepends the
+        scalar-prefetch operands the plan needs (the decode LUT under
+        ``prefetch_lut``; the sharded planner adds its per-device shard
+        table), shifting any ``input_output_aliases`` accordingly, and
+        selects the plain grid vs ``PrefetchScalarGridSpec`` path.
+
+        When :meth:`bound_prefetch` returns tables, the returned
+        callable takes just the array operands; when it returns ``None``
+        the caller must pass the prefetch operands first (sharded plans,
+        whose tables are per-device shard_map operands)."""
         # normalize None-vs-{} once so every lowering sees the same
         # (possibly shifted) alias dict
         aliases = {int(i): int(o)
                    for i, o in (input_output_aliases or {}).items()}
-        if self.lowering == "prefetch_lut":
-            def wrapped(lut_ref, *refs):
-                kernel(self.kernel_coords(lut_ref), *refs)
+        nsp = self.num_scalar_prefetch
+        if nsp:
+            def wrapped(*args):
+                refs = args[nsp:]
+                kernel(self.kernel_coords(*args[:nsp]), *refs)
 
             grid_spec = pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=1,
+                num_scalar_prefetch=nsp,
                 grid=self.grid,
                 in_specs=list(in_specs),
                 out_specs=out_specs,
                 scratch_shapes=list(scratch_shapes),
             )
-            # operand indices count the prefetch table as input 0
-            aliases = {i + 1: o for i, o in aliases.items()}
+            # operand indices count the prefetch tables as inputs 0..nsp
+            aliases = {i + nsp: o for i, o in aliases.items()}
             call = pl.pallas_call(
                 wrapped, grid_spec=grid_spec, out_shape=out_shape,
                 input_output_aliases=aliases, interpret=interpret,
                 **kwargs)
-            lut = self.lut()
-            return lambda *operands: call(lut, *operands)
+            bound = self.bound_prefetch()
+            if bound is None:
+                return lambda *operands: call(*operands)
+            return lambda *operands: call(*bound, *operands)
 
         def wrapped(*refs):
             kernel(self.kernel_coords(), *refs)

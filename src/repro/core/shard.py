@@ -1,0 +1,528 @@
+"""Mesh-aware block-space execution: ShardedPlan partitions a
+BlockDomain across one axis of a ``jax.sharding.Mesh`` and lowers each
+device's sub-domain through the existing GridPlan paths (closed_form /
+prefetch_lut / bounding) inside ``shard_map``.
+
+Partitions
+----------
+
+``"storage-rows"`` (compact storage)
+    The packed orthotope of :class:`~repro.core.compact.CompactLayout`
+    is split into D contiguous *slot-row* slabs (supertile rows under
+    ``coarsen``, via the existing :class:`SuperTiling` geometry), padded
+    to a common height.  Each device holds only its slab -- per-device
+    memory is O(n^H / D) + halo -- and enumerates its slots row-major:
+    the closed-form decode is ``lambda(w_x, w_y)`` evaluated directly on
+    the orthotope coordinate (``FractalSpec.lambda_map``), i.e. the
+    paper's map re-rooted at the device's first packed row.  Because the
+    fractal orthotope is dense (Lemma 2: num_slots == num_blocks), equal
+    row slabs are an exactly balanced work partition.
+
+``"linear"`` (embedded storage)
+    The canonical lambda-order enumeration [0, num_blocks) is split into
+    D contiguous ranges -- sharding the paper's *parallel space* itself.
+    State arrays stay replicated (they are already the dense O(n^2)
+    layout); each device computes its range and the driver combines with
+    a disjoint-ownership-mask ``psum`` (exact: every cell has exactly
+    one nonzero contributor).
+
+``"rows"`` (attention: the query-block axis)
+    Query-block rows are split into D contiguous bands; the domains'
+    canonical enumerations are row-major in the query block, so each
+    band is a contiguous linear range and the closed-form decode is the
+    parent decode at a per-device offset.  Q and O shard along the
+    sequence axis; K/V stay replicated.
+
+Per-device parameters inside SPMD
+---------------------------------
+
+``shard_map`` traces one program for all devices, so anything
+device-dependent must arrive through *sharded operands*.  Every sharded
+lowering therefore carries one extra scalar-prefetch operand, the
+**shard table** -- ``[lo_or_row_lo, count, ...]`` plus, under compact
+storage, the ghost-row map -- and ``prefetch_lut`` additionally ships
+its (per-device, padded) decode LUT.  Validity of a grid step
+(padding, uneven splits, ownership under ``bounding``) is folded into
+``BlockCoords.valid``, which every kernel already honours.
+
+Halo exchange (compact CA)
+--------------------------
+
+A slab's blocks have embedded neighbours whose lambda^-1-resolved slots
+may live in other devices' slabs -- and orthotope row distance is not
+embedded distance, so the ghost rows of a slab are a *scattered* set of
+remote rows.  :class:`HaloPlan` resolves them host-side from the
+layout's neighbour tables, and exchanges exactly those rows between
+launches with one ``jax.lax.ppermute`` per active device offset; the
+kernel then reads ``[local slab ++ ghost rows ++ dump row]`` through the
+shard table's ghost map.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from .compact import NEIGHBOR_OFFSETS8
+from .domain import BlockDomain
+from .plan import _LUT_NBR, GridPlan
+
+PARTITIONS = ("linear", "rows", "storage-rows")
+
+#: shard-table column layout (i32): [0] the device's linear offset
+#: (linear/rows) or first owned storage row (storage-rows); [1] the
+#: number of valid grid steps / owned blocks; [2] the first owned
+#: query-block row ("rows") -- then, for "storage-rows", the ghost map
+#: (global storage row -> row of the device's extended local array).
+SHARD_LO = 0
+SHARD_COUNT = 1
+SHARD_ROWLO = 2
+SHARD_GMAP = 2
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class HaloPlan:
+    """Host-resolved ghost-row exchange for a storage-row partition.
+
+    For each device: which global storage rows (supertile rows under
+    coarsening) its halo needs (``ghost_rows``), and per device-offset
+    ``delta`` the padded send/recv index tables a single ``ppermute``
+    round uses.  ``h_max`` ghost rows (+1 dump row for padding traffic
+    and never-needed rows) bound the halo memory.
+    """
+
+    def __init__(self, plan: "ShardedPlan", with_halo: bool):
+        D, rpd, nrows = plan.num_shards, plan.rpd, plan.nrows
+        self.ghost_rows = [[] for _ in range(D)]
+        if with_halo:
+            if plan._tiling is not None:
+                own = plan._tiling.tiles_host()
+                nbrs = plan._tiling.neighbor_tiles_host()
+            else:
+                own = plan.layout.slots_host()
+                nbrs = plan.layout.neighbor_slots_host()
+            rows = own[:, 1]
+            for d in range(D):
+                lo, hi = d * rpd, min((d + 1) * rpd, nrows)
+                sel = (rows >= lo) & (rows < hi)
+                nb = nbrs[sel]
+                need = np.unique(nb[..., 1][nb[..., 2] == 1])
+                self.ghost_rows[d] = sorted(
+                    int(g) for g in need if not lo <= g < hi)
+        self.h_max = max((len(g) for g in self.ghost_rows), default=0)
+        # ghost map: global row -> row of [slab ++ ghosts ++ dump]
+        dump = rpd + self.h_max
+        gmap = np.full((D, plan.nrows_pad), dump, np.int32)
+        for d in range(D):
+            lo = d * rpd
+            for i in range(rpd):
+                if lo + i < plan.nrows_pad:
+                    gmap[d, lo + i] = i
+            for p, g in enumerate(self.ghost_rows[d]):
+                gmap[d, g] = rpd + p
+        self.ghost_map = gmap
+        # one ppermute round per device offset delta with any traffic
+        self.deltas = []       # [(delta, send_idx (D, m), recv_pos (D, m))]
+        for delta in range(1, D):
+            needs = [[g for g in self.ghost_rows[d]
+                      if g // rpd == (d - delta) % D] for d in range(D)]
+            m = max(len(x) for x in needs)
+            if m == 0:
+                continue
+            send = np.zeros((D, m), np.int32)
+            recv = np.full((D, m), self.h_max, np.int32)  # pad -> dump
+            for d in range(D):
+                for i, g in enumerate(needs[(d + delta) % D]):
+                    send[d, i] = g - d * rpd          # local row at source
+                for i, g in enumerate(needs[d]):
+                    recv[d, i] = self.ghost_rows[d].index(g)
+            self.deltas.append((delta, send, recv))
+
+    def send_recv_host(self):
+        """((send_0, recv_0), ...) host tables, one pair per round;
+        drivers pass them into shard_map sharded along the mesh axis."""
+        return tuple((s, r) for _, s, r in self.deltas)
+
+    def extend(self, plan: "ShardedPlan", local: jnp.ndarray,
+               send_recv) -> jnp.ndarray:
+        """Inside shard_map: local slab (rpd*RU, W) -> extended array
+        ((rpd + h_max + 1)*RU, W) = slab ++ exchanged ghost rows ++ a
+        zero-init dump row, via one ppermute per active delta."""
+        rpd, RU = plan.rpd, plan.row_unit
+        W = local.shape[-1]
+        rows = local.reshape(rpd, RU, W)
+        ghost = jnp.zeros((self.h_max + 1, RU, W), local.dtype)
+        D = plan.num_shards
+        for (delta, _, _), (send, recv) in zip(self.deltas, send_recv):
+            payload = rows[send.reshape(-1)]
+            got = jax.lax.ppermute(
+                payload, plan.axis,
+                [(s, (s + delta) % D) for s in range(D)])
+            ghost = ghost.at[recv.reshape(-1)].set(got)
+        return jnp.concatenate([rows, ghost], axis=0).reshape(
+            (rpd + self.h_max + 1) * RU, W)
+
+
+class ShardedPlan(GridPlan):
+    """A GridPlan whose grid is one device's share of the domain.
+
+    Parameters beyond :class:`GridPlan`:
+
+    mesh, axis:  the jax Mesh and the name of the axis to shard over.
+    partition:   "storage-rows" | "linear" | "rows" (default: by
+                 storage -- compact shards its packed rows, embedded
+                 shards the canonical enumeration).
+    halo:        build the ghost-row exchange plan (CA stencils under
+                 compact storage; write/sum leave it off).
+
+    The plan's specs address *local* arrays: under "storage-rows" the
+    device's padded slab (inputs may be the halo-extended array), under
+    "rows" the device's query-row band, under "linear" the replicated
+    global array.  All host tables a driver must feed through shard_map
+    come from :meth:`shard_table_host`, :meth:`lut_sharded_host` and
+    ``halo.send_recv_host()``.
+    """
+
+    def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
+                 batch_dims: Sequence[int] = (), storage: str = "embedded",
+                 coarsen: int = 1, *, mesh: Mesh, axis: str,
+                 partition: Optional[str] = None, halo: bool = False):
+        super().__init__(domain, lowering, batch_dims, storage, coarsen)
+        self.mesh, self.axis = mesh, axis
+        self.num_shards = int(mesh.shape[axis])
+        if partition is None:
+            partition = "storage-rows" if self.storage == "compact" \
+                else "linear"
+        if partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {partition!r}; expected "
+                             f"one of {PARTITIONS}")
+        if partition == "storage-rows" and self.storage != "compact":
+            raise ValueError("storage-rows partition requires compact "
+                             "storage")
+        if partition != "storage-rows" and self.storage == "compact":
+            raise ValueError("compact storage shards its packed rows; "
+                             f"partition {partition!r} is embedded-only")
+        self.partition = partition
+        D = self.num_shards
+        if partition == "storage-rows":
+            self.ncols, self.nrows = self._storage_grid()
+            self.rpd = _ceil_div(self.nrows, D)
+            self.nrows_pad = self.rpd * D
+            N = self.sched_domain.num_blocks
+            lo = np.minimum(np.arange(D) * self.rpd * self.ncols, N)
+            self._lo = lo.astype(np.int64)
+            self._count = np.minimum(
+                N - lo, self.rpd * self.ncols).clip(min=0)
+            self.steps_per_shard = self.rpd * self.ncols
+            self.halo = HaloPlan(self, with_halo=halo)
+        elif partition == "rows":
+            nbx, nby = self.sched_domain.bounding_box
+            by = self.sched_domain.coords_host()[:, 1]
+            if np.any(np.diff(by) < 0):
+                raise ValueError(
+                    f"'rows' partition needs a query-row-major "
+                    f"enumeration; {self.sched_domain.name} is not")
+            self.rbd = _ceil_div(nby, D)
+            row_lo = np.minimum(np.arange(D + 1) * self.rbd, nby)
+            lo = np.searchsorted(by, row_lo, side="left")
+            self._row_lo = row_lo[:-1].astype(np.int64)
+            self._lo = lo[:-1].astype(np.int64)
+            self._count = np.diff(lo).astype(np.int64)
+            self.steps_per_shard = int(self._count.max())
+            self.halo = None
+        else:  # linear
+            N = self.sched_domain.num_blocks
+            per = _ceil_div(N, D)
+            lo = np.minimum(np.arange(D) * per, N)
+            self._lo = lo.astype(np.int64)
+            self._count = np.minimum(N - lo, per).clip(min=0)
+            self.steps_per_shard = per
+            self.halo = None
+
+    # -- storage geometry ----------------------------------------------------
+
+    def _storage_grid(self) -> Tuple[int, int]:
+        """(ncols, nrows) of the scheduled storage grid: supertiles
+        under coarsening, packed slots otherwise."""
+        if self._tiling is not None:
+            scols, srows = self.layout.grid_shape
+            bw, bh = self._tiling.sub_shape
+            return scols // bw, srows // bh
+        return self.layout.grid_shape
+
+    @property
+    def row_unit(self) -> int:
+        """Cells per storage row of one fine block row -- set by the
+        driver via :meth:`bind_block`."""
+        return self._row_unit
+
+    def bind_block(self, block: int) -> "ShardedPlan":
+        """Record the fine block size (cells); needed to convert storage
+        rows to array rows for padding / halo exchange."""
+        th, _ = self.supertile_shape((block, block))
+        self._row_unit = th if self.storage == "compact" else block
+        self._block = block
+        return self
+
+    def local_storage_shape(self, block: int) -> Tuple[int, int]:
+        """Cell shape of one device's storage-array shard."""
+        if self.storage == "embedded":
+            return self.layout.embedded_shape(block)
+        self.bind_block(block)
+        _, tw = self.supertile_shape((block, block))
+        return (self.rpd * self.row_unit, self.ncols * tw)
+
+    def global_padded_rows(self, block: int) -> int:
+        self.bind_block(block)
+        return self.nrows_pad * self.row_unit
+
+    def pad_rows(self, arr: jnp.ndarray, block: int) -> jnp.ndarray:
+        """Zero-pad a global packed array to D-divisible storage rows."""
+        rows = self.global_padded_rows(block)
+        pad = rows - arr.shape[0]
+        if pad == 0:
+            return arr
+        return jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1))
+
+    def unpad_rows(self, arr: jnp.ndarray, block: int) -> jnp.ndarray:
+        scols, srows = self.layout.grid_shape
+        return arr[:srows * block]
+
+    # -- per-device tables ---------------------------------------------------
+
+    def shard_table_host(self) -> np.ndarray:
+        """(D, L) i32: one shard-table row per device (see SHARD_*)."""
+        D = self.num_shards
+        cols = [self._row_lo_col(), self._count]
+        if self.partition == "rows":
+            cols.append(self._row_lo)
+        tbl = np.stack([np.asarray(c, np.int64) for c in cols], -1)
+        if self.partition == "storage-rows":
+            tbl = np.concatenate([tbl, self.halo.ghost_map], axis=1)
+        return tbl.astype(np.int32)
+
+    def _row_lo_col(self):
+        if self.partition == "storage-rows":
+            return np.arange(self.num_shards) * self.rpd
+        return self._lo
+
+    def lut_sharded_host(self) -> Optional[np.ndarray]:
+        """(D * steps_per_shard, C) i32 decode table under prefetch_lut:
+        the parent LUT re-ordered into each device's enumeration order,
+        chunked per device and padded (pad rows repeat the chunk head so
+        every read stays in-range; validity comes from the shard table's
+        count)."""
+        if self.lowering != "prefetch_lut":
+            return None
+        base = GridPlan.lut_host(self)
+        if self.partition == "storage-rows":
+            if self._tiling is not None:
+                slots = self._tiling.tiles_host()
+            else:
+                slots = self.layout.slots_host()
+            order = np.argsort(
+                slots[:, 1].astype(np.int64) * self.ncols + slots[:, 0],
+                kind="stable")
+            base = base[order]
+        per = self.steps_per_shard
+        out = np.zeros((self.num_shards, per, base.shape[1]), base.dtype)
+        for d in range(self.num_shards):
+            lo, c = int(self._lo[d]), int(self._count[d])
+            fill = base[lo] if c else base[0]
+            out[d] = fill
+            out[d, :c] = base[lo:lo + c]
+        return out.reshape(self.num_shards * per, base.shape[1])
+
+    # -- GridPlan overrides --------------------------------------------------
+
+    @property
+    def num_scalar_prefetch(self) -> int:
+        return 2 if self.lowering == "prefetch_lut" else 1
+
+    def bound_prefetch(self):
+        return None  # per-device tables: the driver passes them
+
+    @property
+    def grid(self):
+        if self.lowering == "bounding":
+            nbx, nby = self.sched_domain.bounding_box
+            if self.partition == "rows":
+                return self.batch_dims + (self.rbd, nbx)
+            return self.batch_dims + (nby, nbx)
+        return self.batch_dims + (self.steps_per_shard,)
+
+    def _storage_coords(self, col, row):
+        """Storage grid position (col, row) -> scheduled embedded block
+        coords, the sharded closed-form decode (lambda on the orthotope
+        coordinate; linear-order block_coords for block-linear
+        layouts)."""
+        if self._tiling is not None:
+            t = self._tiling
+            wx, wy = (col, row) if t.j % 2 == 0 else (row, col)
+            return t.spec.lambda_map(wx, wy, t.coarse.r_b)
+        spec = self.layout._fractal_spec()
+        if spec is not None:
+            return spec.lambda_map(col, row, self.domain.r_b)
+        i = jnp.clip(row * self.ncols + col, 0,
+                     self.sched_domain.num_blocks - 1)
+        return self.sched_domain.block_coords(i)
+
+    def _storage_row(self, bx, by):
+        """Scheduled block coords -> its global storage row (traceable)."""
+        if self._tiling is not None:
+            return self._tiling.tile_index(bx, by)[1]
+        return self.layout.slot(bx, by)[1]
+
+    def _decode(self, grid_ids, prefetch_refs=()):
+        nb = len(self.batch_dims)
+        batch = tuple(grid_ids[:nb])
+        sref = prefetch_refs[0]
+        if self.lowering == "bounding":
+            by, bx = grid_ids[nb], grid_ids[nb + 1]
+            if self.partition == "rows":
+                by = by + sref[SHARD_ROWLO]
+            return batch, bx, by
+        t = grid_ids[nb]
+        if self.lowering == "prefetch_lut":
+            lut_ref = prefetch_refs[1]
+            return batch, lut_ref[t, 0], lut_ref[t, 1]
+        if self.partition == "storage-rows":
+            col = t % self.ncols
+            row = jnp.minimum(sref[SHARD_LO] + t // self.ncols,
+                              self.nrows - 1)
+            bx, by = self._storage_coords(col, row)
+            return batch, bx, by
+        # linear / rows: the parent enumeration at the device offset,
+        # clamped into the device's own range so padded steps decode to
+        # an owned (and discarded) block
+        i = jnp.clip(sref[SHARD_LO]
+                     + jnp.minimum(t, sref[SHARD_COUNT] - 1),
+                     0, self.sched_domain.num_blocks - 1)
+        return batch, *self.sched_domain.block_coords(i)
+
+    def _place_coords(self, bx, by, prefetch_refs=()):
+        if self.partition == "rows":
+            return bx, by - prefetch_refs[0][SHARD_ROWLO]
+        return bx, by
+
+    def _step_valid(self, grid_ids, bx, by, prefetch_refs=()):
+        sref = prefetch_refs[0]
+        nb = len(self.batch_dims)
+        if self.lowering != "bounding":
+            return grid_ids[nb] < sref[SHARD_COUNT]
+        member = super()._step_valid(grid_ids, bx, by, prefetch_refs)
+        owned = self._owned(sref, bx, by)
+        return owned if member is None else member & owned
+
+    def _owned(self, sref, bx, by):
+        """Does this device own scheduled block (bx, by)?  Traceable;
+        garbage for non-member coords (mask with membership first)."""
+        if self.partition == "storage-rows":
+            row = self._storage_row(bx, by)
+            return (row >= sref[SHARD_LO]) \
+                & (row < sref[SHARD_LO] + self.rpd)
+        if self.partition == "rows":
+            nby = self.sched_domain.bounding_box[1]
+            return (by >= sref[SHARD_ROWLO]) \
+                & (by < sref[SHARD_ROWLO] + self.rbd) & (by < nby)
+        li = self.sched_domain.linear_index(bx, by)
+        return (li >= sref[SHARD_LO]) \
+            & (li < sref[SHARD_LO] + sref[SHARD_COUNT])
+
+    # -- storage-array specs (local slab addressing) -------------------------
+
+    def storage_spec(self, block_shape):
+        if self.storage == "embedded":
+            return super().storage_spec(block_shape)
+        from jax.experimental import pallas as pl
+        tile = self.supertile_shape(block_shape)
+        nsp = self.num_scalar_prefetch
+        if self.lowering == "bounding":
+            def im(*args):
+                grid_ids, refs = self._split_im_args(args, nsp)
+                _, bx, by = self._decode(grid_ids, refs)
+                row = jnp.clip(self._storage_row(bx, by), 0,
+                               self.nrows_pad - 1)
+                loc = jnp.clip(refs[0][SHARD_GMAP + row], 0, self.rpd - 1)
+                col = self._storage_col(bx, by)
+                return loc, col
+        else:
+            # the sharded enumerations are slab-row-major: the step
+            # index addresses the local slab directly
+            def im(*args):
+                grid_ids, _ = self._split_im_args(args, nsp)
+                t = grid_ids[len(self.batch_dims)]
+                return t // self.ncols, t % self.ncols
+        return pl.BlockSpec(tile, im)
+
+    def _storage_col(self, bx, by):
+        if self._tiling is not None:
+            return self._tiling.tile_index(bx, by)[0]
+        return self.layout.slot(bx, by)[0]
+
+    def neighbor_spec(self, block_shape, j: int):
+        if self.storage == "embedded":
+            return super().neighbor_spec(block_shape, j)
+        from jax.experimental import pallas as pl
+        dx, dy = NEIGHBOR_OFFSETS8[j]
+        tile = self.supertile_shape(block_shape)
+        nsp = self.num_scalar_prefetch
+
+        def im(*args):
+            grid_ids, refs = self._split_im_args(args, nsp)
+            sref = refs[0]
+            if self.lowering == "prefetch_lut":
+                t = grid_ids[len(self.batch_dims)]
+                lut_ref = refs[1]
+                nsx = lut_ref[t, _LUT_NBR + 3 * j]
+                nsy = lut_ref[t, _LUT_NBR + 3 * j + 1]
+            else:
+                _, bx, by = self._decode(grid_ids, refs)
+                if self._tiling is not None:
+                    nsx, nsy, _ok = self._tiling.neighbor_tile(
+                        bx, by, dx, dy)
+                else:
+                    nsx, nsy, _ok = self.layout.neighbor_slot(
+                        bx, by, dx, dy)
+            row = jnp.clip(nsy, 0, self.nrows_pad - 1)
+            return sref[SHARD_GMAP + row], nsx
+        return pl.BlockSpec(tile, im)
+
+    # -- ownership masks for the embedded psum combine -----------------------
+
+    def owned_cell_mask(self, tbl, n: int, block: int) -> jnp.ndarray:
+        """(n, n) bool inside shard_map: cells of member fine blocks
+        whose *scheduled* block this device owns.  Ownership is disjoint
+        and complete over member blocks, so masked psum combines are
+        exact."""
+        iy = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        ix = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        fbx, fby = ix // block, iy // block
+        member = self.domain.contains(fbx, fby)
+        sbx, sby = fbx // self.coarsen, fby // self.coarsen
+        return member & self._owned(tbl, sbx, sby)
+
+    def member_cell_block_mask(self, n: int, block: int) -> jnp.ndarray:
+        """(n, n) bool: cells belonging to member fine blocks."""
+        iy = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        ix = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        return self.domain.contains(ix // block, iy // block)
+
+
+def device_tables(plan: ShardedPlan):
+    """(shard_table, lut_tuple) device arrays for a driver's shard_map:
+    the (D, L) shard table plus, under prefetch_lut, the per-device
+    decode LUT -- both sharded ``P(axis, None)`` on their leading axis
+    so each device receives its own row/chunk.  One builder shared by
+    every sharded kernel driver so the prefetch-operand plumbing cannot
+    drift between kernels."""
+    tbl = jnp.asarray(plan.shard_table_host())
+    lut = plan.lut_sharded_host()
+    luts = (jnp.asarray(lut),) if lut is not None else ()
+    return tbl, luts

@@ -93,17 +93,46 @@ class TuneCache:
             self.save()
 
     def save(self) -> None:
+        """Merge-on-save: under an exclusive lock, re-read the file and
+        union it with the in-memory entries (ours win on conflict)
+        before the atomic write, so concurrent tuning/benchmark
+        processes append to the cache instead of clobbering each
+        other's entries.  A corrupt or partially-written file on disk
+        merges as empty.  The flock closes the read-merge-write window;
+        on platforms without fcntl the merge still narrows it to the
+        dump itself."""
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tune.tmp")
         try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(self._load(), f, indent=1, sort_keys=True)
-            os.replace(tmp, self.path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+            import fcntl
+            lock = open(self.path + ".lock", "w")
+            fcntl.flock(lock, fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            lock = None
+        try:
+            ours = self._load()
+            merged = {}
+            try:
+                with open(self.path) as f:
+                    disk = json.load(f)
+                if isinstance(disk, dict):
+                    merged.update(disk)
+            except (OSError, ValueError):
+                pass
+            merged.update(ours)
+            self._data = merged
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tune.tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(merged, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        finally:
+            if lock is not None:
+                lock.close()
 
     def __len__(self) -> int:
         return len(self._load())
@@ -126,6 +155,18 @@ def _with_backend(params: dict) -> dict:
     p = dict(params)
     p.setdefault("backend", jax.default_backend())
     return p
+
+
+def shard_params(params: dict, mesh, shard_axis: str) -> dict:
+    """Qualify a tuning key with the shard count a kernel will actually
+    run at (``mesh.shape[shard_axis]``), so a single-device winner never
+    answers for a sharded run and different shard counts never collide.
+    Unsharded lookups (``mesh=None``) keep the unqualified key, so
+    existing caches remain valid.  The kernel entry points route every
+    ``"auto"`` resolve through this."""
+    if mesh is None:
+        return params
+    return {**params, "devices": int(mesh.shape[shard_axis])}
 
 
 def measure(fn: Callable, *args, warmup: int = MEASURE_WARMUP,

@@ -112,9 +112,10 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
-    "storage", "kv_seq_len", "interpret"))
+    "storage", "kv_seq_len", "interpret", "mesh", "shard_axis"))
 def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
-                grid_mode, storage, kv_seq_len, interpret):
+                grid_mode, storage, kv_seq_len, interpret, mesh=None,
+                shard_axis="data"):
     b, h, sq, d = q.shape
     _, hkv, sk_arr, _ = k.shape
     group = h // hkv
@@ -145,7 +146,19 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
     off = sk - sq if kind == "local" else 0
 
     domain = make_attention_domain(kind, m_q, m_k, wb)
-    plan = GridPlan(domain, grid_mode, batch_dims=(b * h,))
+    if mesh is not None:
+        from repro.core.shard import ShardedPlan
+        D = int(mesh.shape[shard_axis])
+        if m_q % D:
+            raise ValueError(
+                f"sharded flash needs the query-block grid divisible by "
+                f"the mesh axis: m_q={m_q} blocks over {D} devices")
+        plan = ShardedPlan(domain, grid_mode, batch_dims=(b * h,),
+                           mesh=mesh, axis=shard_axis, partition="rows")
+        out_shape = (b, h, sq // D, d)
+    else:
+        plan = GridPlan(domain, grid_mode, batch_dims=(b * h,))
+        out_shape = q.shape
 
     # compact KV: k/v hold only the key blocks in [s0, m_k)
     s0 = key_block_support(domain)[0] if storage == "compact" else 0
@@ -174,7 +187,7 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
             plan.block_spec((1, 1, block_k, d), kv_place),
         ],
         out_specs=plan.block_spec((1, 1, block_q, d), q_place),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -182,7 +195,31 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
         ],
         interpret=interpret,
     )
-    return call(q, k, v)
+    if mesh is None:
+        return call(q, k, v)
+
+    # shard the query-block axis: q/o split along the sequence dim,
+    # k/v replicated; each device runs its contiguous query-row band
+    # (whole rows, so the online-softmax state never crosses devices).
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.shard import device_tables
+
+    axis = shard_axis
+    tbl, luts = device_tables(plan)
+    qkv_specs = (P(None, None, axis, None), P(None, None, None, None),
+                 P(None, None, None, None))
+
+    def device_fn(tbl, luts, q, k, v):
+        return call(tbl.reshape(-1), *luts, q, k, v)
+
+    return shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis, None), tuple(P(axis, None) for _ in luts))
+        + qkv_specs,
+        out_specs=P(None, None, axis, None), check_rep=False)(
+            tbl, luts, q, k, v)
 
 
 def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
@@ -191,7 +228,8 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     grid_mode: str = "compact",
                     storage: str = "embedded",
                     kv_seq_len: int | None = None,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None, mesh=None,
+                    shard_axis: str = "data"):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
 
     kind:      "causal" | "local" (window tokens) | "full"
@@ -209,21 +247,32 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     causal requires Sq == Sk; local accepts Sq < Sk with the decode
     convention (queries are the last Sq positions) when
     Sk - Sq >= window (full window per query block).
+
+    ``mesh=`` shards the query-block axis of the block domain over
+    ``shard_axis``: q and the output split along the sequence dim into
+    contiguous query-row bands (one owner per row, so the online
+    softmax never crosses devices and results are bit-identical); k/v
+    stay replicated.  Requires Sq/block_q divisible by the axis size.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    from repro.core import tune
+
     from .sierpinski_write import resolve_auto_schedule
     b, h, sq, d = q.shape
     _, hkv, _, _ = k.shape
     sk = kv_seq_len if kv_seq_len is not None else k.shape[2]
     grid_mode, block_q, block_k = resolve_auto_schedule(
         "flash",
-        {"kind": kind, "batch": b, "heads": h, "kv_heads": hkv,
-         "sq": sq, "sk": sk, "d": d, "window": window},
+        tune.shard_params(
+            {"kind": kind, "batch": b, "heads": h, "kv_heads": hkv,
+             "sq": sq, "sk": sk, "d": d, "window": window},
+            mesh, shard_axis),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         block_q=(block_q, "block_q", 128),
         block_k=(block_k, "block_k", 128))
     return _flash_impl(q, k, v, kind=kind, window=window, scale=scale,
                        block_q=block_q, block_k=block_k,
                        grid_mode=grid_mode, storage=storage,
-                       kv_seq_len=kv_seq_len, interpret=interpret)
+                       kv_seq_len=kv_seq_len, interpret=interpret,
+                       mesh=mesh, shard_axis=shard_axis)

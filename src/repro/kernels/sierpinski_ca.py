@@ -66,14 +66,19 @@ TRACE_COUNTER = {"kernel": 0, "build": 0}
 def auto_schedule(*, fractal: str = "sierpinski-gasket", n: int,
                   block: int, rule: str = "parity",
                   grid_mode: str = "auto", fuse: int | str = "auto",
-                  coarsen: int | str = "auto"):
+                  coarsen: int | str = "auto", mesh=None,
+                  shard_axis: str = "data"):
     """Resolve the (grid_mode, fuse, coarsen) schedule for a CA problem
     from the tune cache -- the exact lookup :func:`ca_run` /
     :func:`ca_step` perform, exposed so drivers can report the schedule
-    they are about to run without re-deriving the cache key."""
+    they are about to run without re-deriving the cache key.  A sharded
+    run (``mesh=``) consults the shard-count-qualified key."""
+    from repro.core import tune
     return resolve_auto_schedule(
         "ca",
-        {"fractal": fractal, "n": n, "block": block, "rule": rule},
+        tune.shard_params(
+            {"fractal": fractal, "n": n, "block": block, "rule": rule},
+            mesh, shard_axis),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         fuse=(fuse, "fuse", 1),
         coarsen=(coarsen, "coarsen", 1))
@@ -217,8 +222,9 @@ def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
         interpret=interpret,
     )
 
-    def launch(a, b, steps_scalar):
-        return call(a, a, a, a, a, a, a, a, a, b, steps_scalar)
+    def launch(a, b, steps_scalar, prefetch=()):
+        return call(*prefetch, a, a, a, a, a, a, a, a, a, b,
+                    steps_scalar)
     return launch
 
 
@@ -255,6 +261,95 @@ _CA_RUN_JIT = {
 }
 
 
+def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
+                         block, grid_mode, fractal, storage, n, domain,
+                         coarsen, interpret, mesh, shard_axis):
+    """ca_run across a mesh axis: each device advances its share of the
+    domain; compact storage is slab-sharded with a ppermute ghost-row
+    exchange before every launch, embedded storage is replicated and
+    combined by a disjoint-ownership-mask psum after every launch.
+    Bit-identical to the single-device scan (every block is computed by
+    exactly one device with the same operands)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.shard import ShardedPlan, device_tables
+
+    domain, n, block, storage = resolve_storage_args(
+        state, block, fractal, storage, n, domain)
+    plan = ShardedPlan(domain, grid_mode, storage=storage,
+                       coarsen=coarsen, mesh=mesh, axis=shard_axis,
+                       halo=(storage == "compact"))
+    fuse = effective_fuse(fuse, steps, block, plan.coarsen)
+    sched = launch_schedule(steps, fuse)
+    if not sched:
+        return state
+    local_shape = plan.local_storage_shape(block)
+    launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
+                           n=n, halo=fuse, shape=local_shape,
+                           dtype=state.dtype, interpret=interpret)
+    tbl, luts = device_tables(plan)
+    sched_arr = jnp.asarray(sched, jnp.int32)
+    axis = shard_axis
+    tbl_spec = P(axis, None)
+    lut_specs = tuple(P(axis, None) for _ in luts)
+
+    if storage == "compact":
+        halo = plan.halo
+        sr = tuple((jnp.asarray(s), jnp.asarray(r))
+                   for s, r in halo.send_recv_host())
+        sr_specs = tuple((P(axis, None), P(axis, None)) for _ in sr)
+        a = plan.pad_rows(state, block)
+        b = plan.pad_rows(stale_buf, block)
+
+        def device_fn(tbl, luts, sr, a, b):
+            pre = (tbl.reshape(-1),) + luts
+
+            def body(carry, per_launch):
+                x, y = carry
+                ext = halo.extend(plan, x, sr)
+                new = launch(ext, y, jnp.reshape(per_launch, (1,)), pre)
+                return (new, x), None
+
+            (xa, _), _ = jax.lax.scan(body, (a, b), sched_arr)
+            return xa
+
+        out = shard_map(
+            device_fn, mesh=mesh,
+            in_specs=(tbl_spec, lut_specs, sr_specs, P(axis, None),
+                      P(axis, None)),
+            out_specs=P(axis, None), check_rep=False)(tbl, luts, sr, a, b)
+        return plan.unpad_rows(out, block)
+
+    def device_fn(tbl, luts, a, b):
+        tbl1 = tbl.reshape(-1)
+        pre = (tbl1,) + luts
+        mask = plan.owned_cell_mask(tbl1, n, block)
+
+        def body(carry, per_launch):
+            x, y = carry
+            part = launch(x, y, jnp.reshape(per_launch, (1,)), pre)
+            new = jax.lax.psum(jnp.where(mask, part, 0), axis)
+            return (new, x), None
+
+        (xa, _), _ = jax.lax.scan(body, (a, b), sched_arr)
+        return xa
+
+    return shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(tbl_spec, lut_specs, P(None, None), P(None, None)),
+        out_specs=P(None, None), check_rep=False)(
+            tbl, luts, state, stale_buf)
+
+
+_CA_SHARD_STATIC = _CA_STATIC + ("mesh", "shard_axis")
+_CA_RUN_SHARD_JIT = {
+    False: jax.jit(_ca_run_sharded_impl, static_argnames=_CA_SHARD_STATIC),
+    True: jax.jit(_ca_run_sharded_impl, static_argnames=_CA_SHARD_STATIC,
+                  donate_argnums=(0, 1)),
+}
+
+
 def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
            fuse: int | str = "auto", rule: str = "parity",
            alpha: float = 0.25, block: int = 128,
@@ -263,7 +358,8 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
            storage: str = "embedded", n: int | None = None,
            domain: BlockDomain | None = None, coarsen: int | str = 1,
            interpret: bool | None = None,
-           donate: bool | None = None) -> jnp.ndarray:
+           donate: bool | None = None, mesh=None,
+           shard_axis: str = "data") -> jnp.ndarray:
     """Advance the CA ``steps`` steps and return the final state.
 
     ``fuse=k`` executes k steps per kernel launch (one in-kernel
@@ -279,23 +375,30 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
     ``stale_buf`` must be zero outside the fractal (the double-buffer
     invariant); both buffers are donated on accelerators unless
     ``donate=False``.  Under ``storage="compact"`` both arrays are
-    packed orthotope-resident (pass ``n=`` or ``domain=``)."""
+    packed orthotope-resident (pass ``n=`` or ``domain=``).
+
+    ``mesh=`` (a ``jax.sharding.Mesh``) shards the run over
+    ``shard_axis``: compact state splits into orthotope row slabs
+    (per-device memory O(n^H / D) + halo) with a lambda^-1-resolved
+    ppermute ghost exchange between launches; embedded state stays
+    replicated and devices psum their disjoint block shares.  Both are
+    bit-identical to the single-device run."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    grid_mode, fuse, coarsen = resolve_auto_schedule(
-        "ca",
-        {"fractal": fractal, "n": n or state.shape[0], "block": block,
-         "rule": rule},
-        grid_mode=(grid_mode, "lowering", "closed_form"),
-        fuse=(fuse, "fuse", 1),
-        coarsen=(coarsen, "coarsen", 1))
+    grid_mode, fuse, coarsen = auto_schedule(
+        fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
+        grid_mode=grid_mode, fuse=fuse, coarsen=coarsen, mesh=mesh,
+        shard_axis=shard_axis)
     if donate is None:
         donate = not interpret and jax.default_backend() != "cpu"
-    return _CA_RUN_JIT[bool(donate)](
-        state, stale_buf, steps=int(steps), fuse=fuse, rule=rule,
-        alpha=alpha, block=block, grid_mode=grid_mode, fractal=fractal,
-        storage=storage, n=n, domain=domain, coarsen=coarsen,
-        interpret=interpret)
+    kw = dict(steps=int(steps), fuse=fuse, rule=rule, alpha=alpha,
+              block=block, grid_mode=grid_mode, fractal=fractal,
+              storage=storage, n=n, domain=domain, coarsen=coarsen,
+              interpret=interpret)
+    if mesh is not None:
+        return _CA_RUN_SHARD_JIT[bool(donate)](
+            state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)
+    return _CA_RUN_JIT[bool(donate)](state, stale_buf, **kw)
 
 
 def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
@@ -304,7 +407,8 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             fractal: str = "sierpinski-gasket",
             storage: str = "embedded", n: int | None = None,
             domain: BlockDomain | None = None, coarsen: int | str = 1,
-            interpret: bool | None = None) -> jnp.ndarray:
+            interpret: bool | None = None, mesh=None,
+            shard_axis: str = "data") -> jnp.ndarray:
     """One CA step (the ``steps=1`` slice of :func:`ca_run`).
 
     ``stale_buf`` must be zero outside the fractal (e.g. the state from
@@ -312,14 +416,14 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
     blocks a compact grid never visits remain valid."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    grid_mode, coarsen = resolve_auto_schedule(
-        "ca",
-        {"fractal": fractal, "n": n or state.shape[0], "block": block,
-         "rule": rule},
-        grid_mode=(grid_mode, "lowering", "closed_form"),
-        coarsen=(coarsen, "coarsen", 1))
-    return _CA_RUN_JIT[False](
-        state, stale_buf, steps=1, fuse=1, rule=rule, alpha=alpha,
-        block=block, grid_mode=grid_mode, fractal=fractal,
-        storage=storage, n=n, domain=domain, coarsen=coarsen,
-        interpret=interpret)
+    grid_mode, _, coarsen = auto_schedule(
+        fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
+        grid_mode=grid_mode, fuse=1, coarsen=coarsen, mesh=mesh,
+        shard_axis=shard_axis)
+    kw = dict(steps=1, fuse=1, rule=rule, alpha=alpha, block=block,
+              grid_mode=grid_mode, fractal=fractal, storage=storage,
+              n=n, domain=domain, coarsen=coarsen, interpret=interpret)
+    if mesh is not None:
+        return _CA_RUN_SHARD_JIT[False](
+            state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)
+    return _CA_RUN_JIT[False](state, stale_buf, **kw)

@@ -196,31 +196,109 @@ def _write_impl(m, value, *, block, grid_mode, fractal, storage, n,
     return call(m)
 
 
+def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
+                   coarsen, mesh, shard_axis):
+    """Shared ShardedPlan + per-device-table construction for the
+    sharded write/sum drivers."""
+    from repro.core.shard import ShardedPlan, device_tables
+
+    domain, n, block, storage = resolve_storage_args(
+        m, block, fractal, storage, n, domain)
+    plan = ShardedPlan(domain, grid_mode, storage=storage,
+                       coarsen=coarsen, mesh=mesh, axis=shard_axis)
+    tbl, luts = device_tables(plan)
+    return plan, domain, n, block, storage, tbl, luts
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("value", "block", "grid_mode",
+                                    "fractal", "storage", "n", "domain",
+                                    "coarsen", "interpret", "mesh",
+                                    "shard_axis"))
+def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
+                        n, domain, coarsen, interpret, mesh, shard_axis):
+    """Sharded write: each device writes its share of the domain.
+    Compact storage writes its orthotope row slab in place; embedded
+    storage combines the replicated per-device results with a disjoint
+    ownership-mask psum (member blocks have exactly one owner, the rest
+    pass the input through)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    plan, domain, n, block, storage, tbl, luts = _sharded_setup(
+        m, block=block, grid_mode=grid_mode, fractal=fractal,
+        storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
+        shard_axis=shard_axis)
+    spec = plan.storage_spec((block, block))
+    call = plan.pallas_call(
+        functools.partial(_write_kernel, value=value, block=block, n=n,
+                          plan=plan),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(plan.local_storage_shape(block),
+                                       m.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )
+    axis = shard_axis
+    lut_specs = tuple(P(axis, None) for _ in luts)
+    if storage == "compact":
+        a = plan.pad_rows(m, block)
+        out = shard_map(
+            lambda tbl, luts, a: call(tbl.reshape(-1), *luts, a),
+            mesh=mesh,
+            in_specs=(P(axis, None), lut_specs, P(axis, None)),
+            out_specs=P(axis, None), check_rep=False)(tbl, luts, a)
+        return plan.unpad_rows(out, block)
+
+    def device_fn(tbl, luts, a):
+        tbl1 = tbl.reshape(-1)
+        part = call(tbl1, *luts, a)
+        owned = plan.owned_cell_mask(tbl1, n, block)
+        member = plan.member_cell_block_mask(n, block)
+        return jax.lax.psum(jnp.where(owned, part, 0), axis) \
+            + jnp.where(member, 0, a).astype(part.dtype)
+
+    return shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis, None), lut_specs, P(None, None)),
+        out_specs=P(None, None), check_rep=False)(tbl, luts, m)
+
+
 def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      block: int = 128, grid_mode: str = "compact",
                      fractal: str = "sierpinski-gasket",
                      storage: str = "embedded", n: int | None = None,
                      domain: BlockDomain | None = None,
                      coarsen: int | str = 1,
-                     interpret: bool | None = None) -> jnp.ndarray:
+                     interpret: bool | None = None, mesh=None,
+                     shard_axis: str = "data") -> jnp.ndarray:
     """Write ``value`` to every fractal cell of the (n, n) state.
 
     grid_mode: closed_form (alias compact) | prefetch_lut | bounding |
     auto (tune-cache lookup); fractal: any registered FractalSpec name;
     storage: embedded (m is the dense n x n array) | compact (m is the
     packed orthotope array, pass n= or domain=); coarsen: superblock
-    side in fine blocks (or "auto")."""
+    side in fine blocks (or "auto"); mesh/shard_axis: shard the write
+    across a mesh axis (embarrassing: disjoint block ownership, psum
+    combine under embedded storage)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    from repro.core import tune
     grid_mode, coarsen = resolve_auto_schedule(
         "write",
-        {"fractal": fractal, "n": n or m.shape[0], "block": block},
+        tune.shard_params(
+            {"fractal": fractal, "n": n or m.shape[0], "block": block},
+            mesh, shard_axis),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         coarsen=(coarsen, "coarsen", 1))
-    return _write_impl(m, value, block=block, grid_mode=grid_mode,
-                       fractal=fractal, storage=storage, n=n,
-                       domain=domain, coarsen=coarsen,
-                       interpret=interpret)
+    kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
+              storage=storage, n=n, domain=domain, coarsen=coarsen,
+              interpret=interpret)
+    if mesh is not None:
+        return _write_sharded_impl(m, value, mesh=mesh,
+                                   shard_axis=shard_axis, **kw)
+    return _write_impl(m, value, **kw)
 
 
 def _sum_kernel(coords, m_ref, o_ref, *, block, n, plan):
@@ -256,13 +334,55 @@ def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
     return call(m)[0, 0]
 
 
+@functools.partial(jax.jit, static_argnames=("block", "grid_mode",
+                                             "fractal", "storage", "n",
+                                             "domain", "coarsen",
+                                             "interpret", "mesh",
+                                             "shard_axis"))
+def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
+                      domain, coarsen, interpret, mesh, shard_axis):
+    """Sharded sum: each device accumulates its owned blocks, one psum
+    reduces across the axis.  The per-device accumulation order differs
+    from the single-device grid order, so results agree to float
+    tolerance (exactly, for integer-valued states)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    plan, domain, n, block, storage, tbl, luts = _sharded_setup(
+        m, block=block, grid_mode=grid_mode, fractal=fractal,
+        storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
+        shard_axis=shard_axis)
+    call = plan.pallas_call(
+        functools.partial(_sum_kernel, block=block, n=n, plan=plan),
+        in_specs=[plan.storage_spec((block, block))],
+        out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )
+    axis = shard_axis
+    lut_specs = tuple(P(axis, None) for _ in luts)
+    state_spec = P(axis, None) if storage == "compact" else P(None, None)
+    a = plan.pad_rows(m, block) if storage == "compact" else m
+
+    def device_fn(tbl, luts, a):
+        part = call(tbl.reshape(-1), *luts, a)
+        return jax.lax.psum(part, axis)
+
+    out = shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis, None), lut_specs, state_spec),
+        out_specs=P(None, None), check_rep=False)(tbl, luts, a)
+    return out[0, 0]
+
+
 def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                    grid_mode: str = "compact",
                    fractal: str = "sierpinski-gasket",
                    storage: str = "embedded", n: int | None = None,
                    domain: BlockDomain | None = None,
                    coarsen: int | str = 1,
-                   interpret: bool | None = None) -> jnp.ndarray:
+                   interpret: bool | None = None, mesh=None,
+                   shard_axis: str = "data") -> jnp.ndarray:
     """f32 sum over fractal cells, sequential accumulate over the plan's
     grid (any lowering; the output block is revisited every step).  The
     grid enumeration -- and therefore the accumulation order -- depends
@@ -272,11 +392,18 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
     bit-exactly."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    from repro.core import tune
     grid_mode, coarsen = resolve_auto_schedule(
         "write",
-        {"fractal": fractal, "n": n or m.shape[0], "block": block},
+        tune.shard_params(
+            {"fractal": fractal, "n": n or m.shape[0], "block": block},
+            mesh, shard_axis),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         coarsen=(coarsen, "coarsen", 1))
-    return _sum_impl(m, block=block, grid_mode=grid_mode, fractal=fractal,
-                     storage=storage, n=n, domain=domain, coarsen=coarsen,
-                     interpret=interpret)
+    kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
+              storage=storage, n=n, domain=domain, coarsen=coarsen,
+              interpret=interpret)
+    if mesh is not None:
+        return _sum_sharded_impl(m, mesh=mesh, shard_axis=shard_axis,
+                                 **kw)
+    return _sum_impl(m, **kw)

@@ -27,3 +27,25 @@ def make_host_mesh(model_parallel: int = 1):
         raise ValueError(f"{n} devices not divisible by tp={model_parallel}")
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def resolve_cli_mesh(spec: str):
+    """One mesh for the whole process, from a CLI flag.
+
+    '' -> None (single device); 'host' -> every visible device as
+    (data, model=1); 'DxM' -> an explicit (data, model) shape.  The
+    returned mesh is the one :mod:`repro.distributed.sharding` rules
+    partition over AND the one the block-space kernels shard over (their
+    ``shard_axis`` defaults to this mesh's 'data' axis), so serving and
+    training never build a second mesh for the fractal side."""
+    if not spec:
+        return None
+    if spec == "host":
+        return make_host_mesh()
+    try:
+        data, model = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects '', 'host' or 'DATAxMODEL' (e.g. '4x2'); "
+            f"got {spec!r}") from None
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -102,18 +102,38 @@ def main():
                              "compact"),
                     help="GridPlan lowering for the attention block "
                          "domain (default: the arch's attn_schedule)")
+    ap.add_argument("--mesh", default="",
+                    help="serve on a device mesh: 'host' (all devices, "
+                         "tp=1) or 'DATAxMODEL' (e.g. '4x2').  The same "
+                         "mesh drives the sharding.py param/cache specs "
+                         "and the block-space kernels' shard_axis "
+                         "('data') -- one mesh for the whole process.")
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.launch.mesh import resolve_cli_mesh
     cfg = get_config(args.arch, smoke=True)
     if args.grid_lowering:
         cfg = cfg.replace(grid_lowering=args.grid_lowering)
         print(f"grid lowering: {cfg.grid_mode} "
               f"(xla schedule: {cfg.attn_schedule_resolved})")
-    params = init(jax.random.PRNGKey(0), cfg)
+    mesh = resolve_cli_mesh(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
+              f"devices (kernels shard over axis 'data')")
+        param_specs = shard_lib.param_spec_tree(
+            model_lib.abstract_init(cfg), cfg)
+        init_fn = jax.jit(
+            partial(init, cfg=cfg),
+            out_shardings=shard_lib.named_sharding_tree(param_specs,
+                                                        mesh))
+        with mesh:
+            params = init_fn(jax.random.PRNGKey(0))
+    else:
+        params = init(jax.random.PRNGKey(0), cfg)
     server = Server(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
-        temperature=args.temperature))
+        temperature=args.temperature), mesh=mesh)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len))

@@ -223,6 +223,11 @@ def main():
                              "compact"),
                     help="GridPlan lowering for the attention block "
                          "domain (default: the arch's attn_schedule)")
+    ap.add_argument("--mesh", default="",
+                    help="train on a device mesh: 'host' (all devices, "
+                         "tp=1) or 'DATAxMODEL' (e.g. '4x2').  Shared "
+                         "by the sharding.py rules and the block-space "
+                         "kernels (shard_axis 'data').")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -241,7 +246,12 @@ def main():
         vocab_size=cfg.vocab_size, seq_len=args.seq_len,
         global_batch=args.global_batch, input_mode=cfg.input_mode,
         d_model=cfg.d_model))
-    trainer = Trainer(cfg, tcfg, mesh=None)
+    from repro.launch.mesh import resolve_cli_mesh
+    mesh = resolve_cli_mesh(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
+              f"devices (kernels shard over axis 'data')")
+    trainer = Trainer(cfg, tcfg, mesh=mesh)
     trainer.run(pipe)
 
 
