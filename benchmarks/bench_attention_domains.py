@@ -51,8 +51,37 @@ def run_kernel_lowerings(iters: int = 5):
                 f"speedup_vs_closed_form={t_closed / t:.2f}")
 
 
+def run_backend_ab(iters: int = 5):
+    """Flash-kernel backend A/B: compact vs bounding lowering per
+    emission target (the gpu rows time the row-loop Triton structure;
+    under the interpreter they validate it, on CUDA they measure
+    it)."""
+    from repro.core import backend as backend_lib
+    default = backend_lib.resolve(None)
+    other = (backend_lib.GPU if default.kind == "tpu"
+             else backend_lib.TPU).emulated()
+    print("# Pallas flash kernel: backend x lowering A/B (causal)")
+    rng = np.random.default_rng(0)
+    s, bq = 256, 64
+    q = jnp.asarray(rng.normal(size=(1, 2, s, 32)), jnp.float32)
+    for tname in (default.name, other.name):
+        times = {}
+        for low in ("closed_form", "bounding"):
+            fn = functools.partial(ops.flash_attention, kind="causal",
+                                   block_q=bq, block_k=bq,
+                                   grid_mode=low, backend=tname)
+            times[low] = time_fn(fn, q, q, q, warmup=2, iters=iters)
+        row(f"backend_flash/{tname}/s={s}/bq={bq}/closed_form",
+            times["closed_form"],
+            f"speedup_vs_bounding="
+            f"{times['bounding'] / times['closed_form']:.2f}")
+        row(f"backend_flash/{tname}/s={s}/bq={bq}/bounding",
+            times["bounding"], "")
+
+
 def run():
     run_kernel_lowerings()
+    run_backend_ab()
     print("# causal flash attention: dense (BB) vs triangular (compact)")
     b, h, d = 1, 4, 64
     for s, chunk in ((2048, 256), (4096, 512), (8192, 1024)):

@@ -120,9 +120,56 @@ def run_storage_ab(iters: int = 5):
             f"speedup={t_emb / t_pk:.2f}")
 
 
+def run_backend_ab(iters: int = 5):
+    """Per-backend lambda(omega)-vs-bounding A/B on the Pallas write
+    and CA kernels -- the paper's figure-level comparison, once per
+    emission structure (:mod:`repro.core.backend`).  Rows cover the
+    platform-default target plus the *other* structure emulated, so the
+    artifact always carries both; on a CUDA machine the ``gpu`` rows
+    time compiled Triton."""
+    from repro.core import backend as backend_lib
+    from repro.kernels.sierpinski_ca import ca_run
+
+    default = backend_lib.resolve(None)
+    other = (backend_lib.GPU if default.kind == "tpu"
+             else backend_lib.TPU).emulated()
+    targets = (default.name, other.name)
+    print("# backend A/B: lambda(omega) compact grids vs bounding-box,")
+    print(f"#   per emission target ({', '.join(targets)})")
+    n, rho = 64, 8
+    m = jnp.zeros((n, n), jnp.float32)
+    state = jnp.zeros((n, n), jnp.float32)
+    for tname in targets:
+        times = {}
+        for low in LOWERINGS:
+            fn = functools.partial(ops.sierpinski_write, value=7.0,
+                                   block=rho, grid_mode=low,
+                                   backend=tname)
+            times[low] = time_fn(fn, m, warmup=2, iters=iters)
+        for low in LOWERINGS:
+            extra = "" if low == "bounding" else \
+                f"speedup_vs_bounding={times['bounding'] / times[low]:.2f}"
+            row(f"backend_write/{tname}/n={n}/rho={rho}/{low}",
+                times[low], extra)
+        ca_times = {}
+        for low in ("closed_form", "bounding"):
+            fn = functools.partial(ca_run, steps=8, rule="parity",
+                                   block=rho, grid_mode=low, fuse=4,
+                                   donate=False, backend=tname)
+            ca_times[low] = time_fn(fn, state, state, warmup=1,
+                                    iters=iters)
+        row(f"backend_ca/{tname}/n={n}/rho={rho}/closed_form",
+            ca_times["closed_form"],
+            f"speedup_vs_bounding="
+            f"{ca_times['bounding'] / ca_times['closed_form']:.2f}")
+        row(f"backend_ca/{tname}/n={n}/rho={rho}/bounding",
+            ca_times["bounding"], "")
+
+
 def run(max_r: int = 11):
     run_lowering_ab()
     run_storage_ab()
+    run_backend_ab()
     print("# paper Fig.8 analogue: lambda vs bounding-box write, CPU/XLA")
     print("# lam_scatter = embedded-layout scatter (CPU-hostile, kept as")
     print("# the documented negative result); lam_packed = compact layout")

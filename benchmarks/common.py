@@ -43,11 +43,17 @@ def run_metadata() -> dict:
     import platform
 
     import jaxlib
+
+    from repro.core import backend as backend_lib
     devs = jax.devices()
     return {
         "jax": jax.__version__,
         "jaxlib": jaxlib.__version__,
         "backend": jax.default_backend(),
+        # the kernel-emission target (repro.core.backend) the run's
+        # Pallas calls defaulted to -- gpu-interpret CI rows stay
+        # distinguishable from tpu-interpret ones
+        "kernel_target": backend_lib.resolve(None).name,
         "device_count": len(devs),
         "device_kinds": sorted({d.device_kind for d in devs}),
         "process_count": jax.process_count(),

@@ -10,7 +10,10 @@ import os
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: map,space,time,ca,sched,shard,attn")
+                    help="comma list: map,space,time,ca,sched,shard,attn,"
+                         "backend (backend = the per-target "
+                         "lambda-vs-bounding A/B rows alone; they are "
+                         "also part of map/attn)")
     ap.add_argument("--json", default=None,
                     help="artifact path (default: BENCH_<tag>.json at "
                          "the repo root)")
@@ -41,6 +44,9 @@ def main() -> None:
         bench_ca.run(sched_ab=False)
     if only is None or "attn" in only:
         bench_attention_domains.run()
+    if only is not None and "backend" in only:
+        bench_sierpinski_map.run_backend_ab()
+        bench_attention_domains.run_backend_ab()
     if not args.no_json:
         path = args.json
         if path is None:

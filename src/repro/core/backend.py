@@ -1,0 +1,321 @@
+"""Backend-neutral kernel emission: the ``BackendTarget`` capability
+descriptor plus the one place in the repo that constructs Pallas grid
+specs.
+
+The paper reports its lambda(omega) speedups on GPUs, but the execution
+engine grew up against TPU Pallas: scalar-prefetch decode tables
+(``pltpu.PrefetchScalarGridSpec``), SMEM scalar operands, and the
+sequential-grid revisiting idiom are Mosaic-specific, and everywhere
+else the kernels silently fell back to interpret mode.  This module
+gives the engine a real backend axis:
+
+``tpu`` (Mosaic)
+    The existing path, unchanged semantics: operand placement happens in
+    ``BlockSpec`` index maps, which may read host-built decode tables
+    through scalar prefetch; run-time scalars ride SMEM refs; the grid
+    is sequential, so revisited output blocks accumulate across steps
+    and online-softmax state lives in VMEM scratch.
+
+``gpu`` (Triton / ``pallas.gpu``)
+    No scalar prefetch and no sequential-grid guarantee, so the same
+    plans lower the way the paper's CUDA kernels (and the follow-up GPU
+    thread-mapping work, arXiv:2004.13475) do: the per-block
+    lambda / slot / neighbour LUT travels as a **regular HBM operand**
+    read in-kernel at ``pl.program_id``; state arrays arrive whole and
+    kernels address tiles with computed offsets (``pl.load`` /
+    ``pl.store``); run-time step counts are ordinary scalar operands;
+    reduction state lives in loop carries, not scratch.  On a CUDA
+    device the call lowers through Triton with ``num_warps`` /
+    ``num_stages`` from the autotuner.
+
+``tpu-interpret`` / ``gpu-interpret``
+    Either structure executed by the Pallas interpreter -- selectable
+    in CI so both lowerings are exercised (and cross-checked
+    bit-for-bit) without the hardware.
+
+Selection order for the default target: an explicit ``backend=``
+argument > :func:`set_default` > the ``REPRO_BACKEND`` environment
+variable > the jax platform (tpu -> ``tpu``, gpu -> ``gpu``, anything
+else -> ``tpu-interpret``, preserving the historical CPU behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: environment override consulted by :func:`resolve` (CI's gpu-backend
+#: job sets ``REPRO_BACKEND=gpu-interpret``).
+BACKEND_ENV = "REPRO_BACKEND"
+
+_OVERRIDE: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendTarget:
+    """Capability descriptor for one kernel-emission target.
+
+    Fields are the capabilities the kernels and plans actually branch
+    on -- nothing here is advisory:
+
+    kind:                "tpu" (Mosaic) or "gpu" (Triton) emission
+                         structure.
+    interpret:           run the structure under the Pallas interpreter.
+    has_scalar_prefetch: BlockSpec index maps may read host decode
+                         tables (``PrefetchScalarGridSpec``).  Without
+                         it, tables become leading HBM operands read
+                         in-kernel.
+    smem_scalar_params:  run-time scalars (fused step counts, decode
+                         positions) ride SMEM refs; otherwise they are
+                         regular (1,) i32 operands.
+    block_indexed:       operand tiles are placed by BlockSpec index
+                         maps (the grid-sequenced Mosaic pipeline);
+                         otherwise state arrays arrive whole and the
+                         kernel computes tile offsets itself.
+    sequential_grid:     grid steps execute in order, so revisited
+                         output blocks may accumulate across steps and
+                         per-row state may live in scratch.  GPU grids
+                         are parallel: reductions must use loop carries
+                         or per-step partials.
+    supports_scratch:    ``scratch_shapes`` (VMEM accumulators) exist.
+    memory_space:        where operand tiles land ("vmem" pipeline
+                         copies vs "hbm" pointers) -- documentation of
+                         the model each structure assumes.
+    """
+
+    name: str
+    kind: str
+    interpret: bool
+    has_scalar_prefetch: bool
+    smem_scalar_params: bool
+    block_indexed: bool
+    sequential_grid: bool
+    supports_scratch: bool
+    memory_space: str
+
+    # -- variants -----------------------------------------------------------
+
+    def emulated(self) -> "BackendTarget":
+        """This structure under the interpreter (idempotent; returns
+        the canonical singleton)."""
+        if self.interpret:
+            return self
+        return TARGETS[self.name + "-interpret"]
+
+    def native(self) -> "BackendTarget":
+        if not self.interpret:
+            return self
+        return TARGETS[self.kind]
+
+    # -- emission helpers ---------------------------------------------------
+
+    def scalar_spec(self) -> pl.BlockSpec:
+        """BlockSpec for a run-time scalar operand (shape (1,) i32):
+        an SMEM ref on TPU, a regular operand elsewhere."""
+        if self.smem_scalar_params:
+            return pl.BlockSpec(memory_space=pltpu.SMEM)
+        return full_spec((1,))
+
+    def scratch(self, shape, dtype):
+        """A VMEM scratch allocation, where the target has scratch."""
+        if not self.supports_scratch:
+            raise ValueError(
+                f"target {self.name!r} has no scratch memory: keep "
+                f"reduction state in loop carries")
+        return pltpu.VMEM(shape, dtype)
+
+    def call_kwargs(self, num_warps: Optional[int] = None,
+                    num_stages: Optional[int] = None) -> dict:
+        """Extra ``pl.pallas_call`` kwargs for this target (the Triton
+        compiler parameters, when actually compiling for a GPU)."""
+        if self.kind == "gpu" and not self.interpret:
+            from jax.experimental.pallas import triton as pltriton
+            return {"compiler_params": pltriton.TritonCompilerParams(
+                num_warps=int(num_warps or 4),
+                num_stages=int(num_stages or 2))}
+        return {}
+
+
+def _mk(name, kind, interpret):
+    tpu = kind == "tpu"
+    return BackendTarget(
+        name=name, kind=kind, interpret=interpret,
+        has_scalar_prefetch=tpu, smem_scalar_params=tpu,
+        block_indexed=tpu, sequential_grid=tpu, supports_scratch=tpu,
+        memory_space="vmem" if tpu else "hbm")
+
+
+TPU = _mk("tpu", "tpu", False)
+GPU = _mk("gpu", "gpu", False)
+TPU_INTERPRET = _mk("tpu-interpret", "tpu", True)
+GPU_INTERPRET = _mk("gpu-interpret", "gpu", True)
+
+TARGETS = {t.name: t for t in (TPU, GPU, TPU_INTERPRET, GPU_INTERPRET)}
+_ALIASES = {"mosaic": "tpu", "triton": "gpu"}
+
+
+def platform_default() -> BackendTarget:
+    """The target the bare jax platform implies, ignoring
+    :func:`set_default` and ``REPRO_BACKEND``.  This is the reference
+    point for *persisted* qualification (tune-cache keys): a process
+    whose default was steered away from the platform must stamp its
+    entries, or another process with a different default would read
+    them as its own."""
+    plat = jax.default_backend()
+    return TPU if plat == "tpu" else (
+        GPU if plat == "gpu" else TPU_INTERPRET)
+
+
+def set_default(name: Optional[str]) -> None:
+    """Process-wide default target override (the ``--backend`` flag of
+    serve/train); ``None`` restores platform/env selection."""
+    global _OVERRIDE
+    if name is not None:
+        resolve(name)  # validate eagerly
+    _OVERRIDE = name
+
+
+def resolve(spec=None, interpret: Optional[bool] = None) -> BackendTarget:
+    """Normalize a backend spec to a :class:`BackendTarget`.
+
+    spec: a target, a name ("tpu" | "gpu" | "*-interpret" | "interpret"
+    = platform default emulated), or None (defaulting rules in the
+    module docstring).  ``interpret=True`` forces emulation;
+    ``interpret=False`` pins the native structure (the caller takes
+    responsibility for the platform).  With ``interpret`` unset, a
+    native target off its own platform auto-emulates -- the historical
+    "interpret off-TPU" fallback, now per-target.
+    """
+    if isinstance(spec, BackendTarget):
+        target = spec
+    else:
+        if spec is None:
+            spec = _OVERRIDE or os.environ.get(BACKEND_ENV) or None
+        if spec is None:
+            plat = jax.default_backend()
+            target = TPU if plat == "tpu" else (
+                GPU if plat == "gpu" else TPU_INTERPRET)
+        else:
+            name = _ALIASES.get(spec, spec)
+            if name == "interpret":
+                plat = jax.default_backend()
+                target = (GPU if plat == "gpu" else TPU).emulated()
+            elif name in TARGETS:
+                target = TARGETS[name]
+            else:
+                raise ValueError(
+                    f"unknown backend {spec!r}; expected one of "
+                    f"{tuple(TARGETS)} or {tuple(_ALIASES)} or "
+                    f"'interpret'")
+    if interpret is True:
+        return target.emulated()
+    if interpret is False:
+        return target.native()
+    if not target.interpret and jax.default_backend() != target.kind:
+        return target.emulated()
+    return target
+
+
+def full_spec(shape) -> pl.BlockSpec:
+    """BlockSpec handing the kernel the whole operand (the GPU targets'
+    HBM-resident view: one block covering the array, pinned at the
+    origin for every grid step)."""
+    nd = len(shape)
+    return pl.BlockSpec(tuple(shape), lambda *_: (0,) * nd)
+
+
+# ---------------------------------------------------------------------------
+# the emitter: every plan-driven pallas_call in the repo goes through
+# here, and this is the only module that constructs a grid spec.
+# ---------------------------------------------------------------------------
+
+def emit(plan, kernel: Callable, *, in_specs, out_specs, out_shape,
+         scratch_shapes=(), input_output_aliases: Optional[dict] = None,
+         interpret: Optional[bool] = None,
+         num_warps: Optional[int] = None,
+         num_stages: Optional[int] = None, **kwargs) -> Callable:
+    """Build the ``pl.pallas_call`` for ``plan`` on its target.
+
+    ``kernel(coords, *refs)`` is lowering- and target-agnostic at the
+    signature level; the wrapper injects the decoded
+    :class:`~repro.core.plan.BlockCoords` and routes the plan's decode
+    tables (``plan.num_scalar_prefetch`` of them) the way the target
+    supports:
+
+    * scalar prefetch (TPU): ``PrefetchScalarGridSpec``, tables
+      readable from index maps and the kernel prologue;
+    * regular operands (GPU): tables become leading full-array HBM
+      operands -- index maps cannot see them, so gpu-structured kernels
+      do their own tile addressing via ``plan.storage_index`` /
+      ``plan.neighbor_index`` with ``coords.grid_ids`` /
+      ``coords.refs``.
+
+    ``input_output_aliases`` is keyed on the *array* operands (tables
+    excluded); the emitter shifts it.  When :meth:`plan.bound_prefetch`
+    returns tables the returned callable takes just the array operands;
+    when it returns ``None`` the caller passes the tables first
+    (sharded plans, whose tables are per-device ``shard_map``
+    operands).
+    """
+    target = plan.target
+    interp = target.interpret if interpret is None else interpret
+    if scratch_shapes and not target.supports_scratch:
+        raise ValueError(
+            f"target {target.name!r} has no scratch memory; "
+            f"gpu-structured kernels keep state in loop carries")
+    aliases = {int(i): int(o)
+               for i, o in (input_output_aliases or {}).items()}
+    nsp = plan.num_scalar_prefetch
+    extra = dict(kwargs)
+    extra.update(target.call_kwargs(num_warps, num_stages))
+
+    if nsp == 0:
+        def wrapped(*refs):
+            kernel(plan.kernel_coords(), *refs)
+
+        call = pl.pallas_call(
+            wrapped, grid=plan.grid, in_specs=list(in_specs),
+            out_specs=out_specs, out_shape=out_shape,
+            scratch_shapes=list(scratch_shapes),
+            input_output_aliases=aliases, interpret=interp, **extra)
+        return lambda *operands: call(*operands)
+
+    def wrapped(*args):
+        kernel(plan.kernel_coords(*args[:nsp]), *args[nsp:])
+
+    # operand indices count the tables as inputs 0..nsp either way
+    aliases = {i + nsp: o for i, o in aliases.items()}
+
+    if target.has_scalar_prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=nsp,
+            grid=plan.grid,
+            in_specs=list(in_specs),
+            out_specs=out_specs,
+            scratch_shapes=list(scratch_shapes),
+        )
+        call = pl.pallas_call(
+            wrapped, grid_spec=grid_spec, out_shape=out_shape,
+            input_output_aliases=aliases, interpret=interp, **extra)
+    else:
+        def call(*args):
+            # table shapes are only known at call time (sharded chunks
+            # arrive pre-split by shard_map); build the call lazily --
+            # these closures only ever run under jit, so construction
+            # cost is per-trace, not per-step.
+            tspecs = [full_spec(t.shape) for t in args[:nsp]]
+            c = pl.pallas_call(
+                wrapped, grid=plan.grid,
+                in_specs=tspecs + list(in_specs),
+                out_specs=out_specs, out_shape=out_shape,
+                input_output_aliases=aliases, interpret=interp, **extra)
+            return c(*args)
+
+    bound = plan.bound_prefetch()
+    if bound is None:
+        return lambda *operands: call(*operands)
+    return lambda *operands: call(*bound, *operands)

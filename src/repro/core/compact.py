@@ -426,3 +426,24 @@ def pack_kv(kv: jnp.ndarray, domain: BlockDomain, block: int) -> jnp.ndarray:
     support: the compact KV the ``storage='compact'`` flash path reads."""
     lo, hi = key_block_support(domain)
     return kv[..., lo * block:hi * block, :]
+
+
+# ---------------------------------------------------------------------------
+# Memoized constructors: layout/tiling geometry (and the host tables
+# the instances cache) is pure in the domain, so repeated traces and
+# multi-host startup share one instance per (domain[, s]) instead of
+# rebuilding -- see repro.core.memo.
+# ---------------------------------------------------------------------------
+
+def compact_layout(domain: BlockDomain) -> CompactLayout:
+    """The (memoized) :class:`CompactLayout` of a domain."""
+    from . import memo
+    return memo.cached("compact-layout", domain, (),
+                       lambda: CompactLayout(domain))
+
+
+def super_tiling(domain: BlockDomain, s: int) -> "SuperTiling":
+    """The (memoized) :class:`SuperTiling` of (domain, s)."""
+    from . import memo
+    return memo.cached("super-tiling", domain, (int(s),),
+                       lambda: SuperTiling(domain, s))

@@ -35,6 +35,14 @@ class BlockDomain:
     always_member: bool = False
 
     @property
+    def cache_key(self):
+        """Hashable identity for host-table memoization
+        (:mod:`repro.core.memo`), or None when the instance cannot
+        guarantee one (e.g. closures over arbitrary membership
+        callables)."""
+        return None
+
+    @property
     def num_blocks(self) -> int:
         raise NotImplementedError
 
@@ -95,6 +103,12 @@ class BoundingBoxDomain(BlockDomain):
         self.always_member = member is None
 
     @property
+    def cache_key(self):
+        if self._member is not None:
+            return None  # membership closure: identity not capturable
+        return ("bounding-box", self.nbx, self.nby)
+
+    @property
     def num_blocks(self) -> int:
         return self.nbx * self.nby
 
@@ -122,6 +136,10 @@ class SierpinskiDomain(BlockDomain):
     def __init__(self, n_b: int):
         self.n_b = n_b
         self.r_b = F.scale_level(n_b)
+
+    @property
+    def cache_key(self):
+        return ("sierpinski", self.n_b)
 
     @property
     def num_blocks(self) -> int:
@@ -160,6 +178,10 @@ class GeneralizedFractalDomain(BlockDomain):
         self.n_b = n_b
         self.r_b = spec.scale_level(n_b)
         self.name = f"fractal:{spec.name}"
+
+    @property
+    def cache_key(self):
+        return ("fractal", self.spec.name, self.n_b)
 
     @property
     def num_blocks(self) -> int:
@@ -222,6 +244,10 @@ class TriangularDomain(BlockDomain):
         self.m = m
 
     @property
+    def cache_key(self):
+        return ("triangular", self.m)
+
+    @property
     def num_blocks(self) -> int:
         return self.m * (self.m + 1) // 2
 
@@ -280,6 +306,10 @@ class BandDomain(BlockDomain):
         self._tw = w * (w + 1) // 2
         if self.off == 0 and m * (m + 1) // 2 >= 2 ** 24:
             raise ValueError("band decode exact only below 2**24 blocks")
+
+    @property
+    def cache_key(self):
+        return ("band", self.m, self.w, self.m_k)
 
     @property
     def num_blocks(self) -> int:

@@ -24,11 +24,13 @@ Lowerings
 
 ``prefetch_lut``
     The lookup-table realization (Navarro et al., "Efficient GPU Thread
-    Mapping on Embedded 2D Fractals"; the TPU analogue ships the host
-    ``coords_host()`` table through ``pltpu.PrefetchScalarGridSpec`` so
-    each decode is an O(1) scalar-memory read instead of the O(r) digit
-    unrolling / integer-sqrt chain).  Bit-identical to ``closed_form``
-    by construction: the table *is* the closed form, evaluated on host.
+    Mapping on Embedded 2D Fractals"): the host ``coords_host()`` table
+    makes each decode an O(1) table read instead of the O(r) digit
+    unrolling / integer-sqrt chain.  How the table travels is the
+    backend's business (:mod:`repro.core.backend`): scalar prefetch on
+    TPU, a regular HBM operand read at ``pl.program_id`` on GPU.
+    Bit-identical to ``closed_form`` by construction: the table *is*
+    the closed form, evaluated on host.
 
 ``bounding``
     The paper's baseline: launch the full bounding-box grid and discard
@@ -65,9 +67,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from . import backend as backend_lib
 from . import fractal as F
+from . import memo
 from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
                      GeneralizedFractalDomain, SierpinskiDomain,
                      TriangularDomain)
@@ -122,16 +125,27 @@ class BlockCoords:
                        so no run-time discard is needed.
     ``first_step``  -- predicate for "is this the first grid step",
                        usable for one-time init of revisited outputs.
+    ``grid_ids``    -- the raw grid indices of this step.
+    ``refs``        -- the plan's decode-table refs, in operand order
+                       (scalar-prefetch refs on TPU, leading HBM
+                       operand refs on GPU).  gpu-structured kernels
+                       pass these back into ``plan.storage_index`` /
+                       ``plan.neighbor_index`` to address state tiles
+                       themselves.
     """
 
-    __slots__ = ("batch", "bx", "by", "valid", "first_step")
+    __slots__ = ("batch", "bx", "by", "valid", "first_step", "grid_ids",
+                 "refs")
 
-    def __init__(self, batch, bx, by, valid, first_step):
+    def __init__(self, batch, bx, by, valid, first_step, grid_ids=(),
+                 refs=()):
         self.batch = tuple(batch)
         self.bx = bx
         self.by = by
         self.valid = valid
         self.first_step = first_step
+        self.grid_ids = tuple(grid_ids)
+        self.refs = tuple(refs)
 
     def when_valid(self, body: Callable[[], None]) -> None:
         """Run ``body`` for member blocks only (no-op guard when the
@@ -165,15 +179,22 @@ class GridPlan:
                  coarse domain and every storage/neighbour spec covers
                  an s x s tile of fine blocks (the decode amortization
                  of Quezada et al.'s coarsening, on the block level).
+    backend:     a :class:`~repro.core.backend.BackendTarget` (or its
+                 name, or None = platform default): the emission
+                 structure every ``pallas_call`` of this plan uses --
+                 "tpu" (Mosaic scalar-prefetch), "gpu" (Triton,
+                 in-kernel HBM addressing), or either "-interpret"
+                 variant.
     """
 
     def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
                  batch_dims: Sequence[int] = (), storage: str = "embedded",
-                 coarsen: int = 1):
+                 coarsen: int = 1, backend=None):
         self.domain = domain
         self.lowering = normalize_lowering(lowering)
         self.batch_dims = tuple(int(d) for d in batch_dims)
         self.storage = normalize_storage(storage)
+        self.target = backend_lib.resolve(backend)
         self.coarsen = int(coarsen)
         if self.coarsen < 1:
             raise ValueError(f"coarsen must be >= 1, got {coarsen}")
@@ -182,18 +203,18 @@ class GridPlan:
             #: the domain the *grid* enumerates (coarse under coarsening)
             self.sched_domain: BlockDomain = domain
         else:
-            from .compact import SuperTiling
-            self._tiling = SuperTiling(domain, self.coarsen)
+            from .compact import super_tiling
+            self._tiling = super_tiling(domain, self.coarsen)
             self.sched_domain = self._tiling.coarse
         self._layout = None
 
     @property
     def layout(self):
-        """The domain's :class:`CompactLayout` (built lazily; available
-        under either storage so callers can pack/unpack)."""
+        """The domain's :class:`CompactLayout` (memoized per domain;
+        available under either storage so callers can pack/unpack)."""
         if self._layout is None:
-            from .compact import CompactLayout
-            self._layout = CompactLayout(self.domain)
+            from .compact import compact_layout
+            self._layout = compact_layout(self.domain)
         return self._layout
 
     # -- grid ---------------------------------------------------------------
@@ -239,7 +260,7 @@ class GridPlan:
 
     def lut_host(self) -> np.ndarray:
         """Host-built i32 decode table, one row per scheduled (member /
-        coarse) block.
+        coarse) block, memoized per (domain, storage, coarsen).
 
         embedded storage: (num_blocks, 2) of (bx, by).
         compact storage:  (num_blocks, 28): (bx, by, sx, sy) plus the
@@ -249,6 +270,10 @@ class GridPlan:
         ``coarsen`` the rows are coarse blocks and the slot columns are
         supertile indices (the rows widen per superblock, never per
         fine block: that is the amortization)."""
+        return memo.cached("gridplan-lut", self.domain,
+                           (self.storage, self.coarsen), self._lut_host)
+
+    def _lut_host(self) -> np.ndarray:
         coords = self.sched_domain.coords_host()
         if self.storage == "embedded":
             return np.asarray(coords, np.int32)
@@ -262,6 +287,7 @@ class GridPlan:
         table = np.concatenate([coords, slots, nbrs],
                                axis=1).astype(np.int32)
         assert table.shape[1] == _LUT_COLS
+        table.setflags(write=False)
         return table
 
     # -- the one shared decode ---------------------------------------------
@@ -352,45 +378,34 @@ class GridPlan:
                px * block:(px + 1) * block] = ex * block + cx
         return oy, ox
 
-    def storage_spec(self, block_shape) -> pl.BlockSpec:
-        """BlockSpec for a 2-D state-array operand under this plan's
-        storage: embedded -> supertile (by, bx) of the bounding-box
-        array; compact -> the packed slot (sy, sx) of the layout (the
-        supertile sub-rectangle index under coarsening).  Under
-        ``prefetch_lut`` the slot is read from the extended LUT; the
-        other lowerings evaluate ``layout.slot`` (lambda^-1) inline.
-        ``block_shape`` is the *fine* block shape; the emitted spec's
-        block is the supertile."""
-        tile = self.supertile_shape(block_shape)
+    def storage_index(self, grid_ids, refs=()):
+        """(row, col) tile index of the state-array operand for one
+        grid step: embedded -> the (super)block's (by, bx) in the
+        bounding-box array; compact -> the packed slot (sy, sx) of the
+        layout (the supertile sub-rectangle index under coarsening).
+        Under ``prefetch_lut`` the slot is read from the extended LUT;
+        the other lowerings evaluate ``layout.slot`` (lambda^-1)
+        inline.  Shared by the ``BlockSpec`` index maps (TPU, where
+        ``refs`` are scalar-prefetch refs) and the gpu-structured
+        kernel bodies (where ``refs`` are the leading HBM operand refs
+        and the returned index drives ``pl.load``/``pl.store``)."""
         if self.storage == "embedded":
-            return self.block_spec(tile, lambda bx, by: (by, bx))
-        nsp = self.num_scalar_prefetch
+            _, bx, by = self._decode(grid_ids, refs)
+            bx, by = self._place_coords(bx, by, refs)
+            return by, bx
         if self.lowering == "prefetch_lut":
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                t = grid_ids[len(self.batch_dims)]
-                lut_ref = refs[-1]
-                return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
-        elif self._tiling is not None:
-            tiling = self._tiling
+            t = grid_ids[len(self.batch_dims)]
+            lut_ref = refs[-1]
+            return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
+        _, bx, by = self._decode(grid_ids, refs)
+        if self._tiling is not None:
+            tx, ty = self._tiling.tile_index(bx, by)
+            return ty, tx
+        sx, sy = self.layout.slot(bx, by)
+        return sy, sx
 
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                _, bx, by = self._decode(grid_ids, refs)
-                tx, ty = tiling.tile_index(bx, by)
-                return ty, tx
-        else:
-            layout = self.layout
-
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                _, bx, by = self._decode(grid_ids, refs)
-                sx, sy = layout.slot(bx, by)
-                return sy, sx
-        return pl.BlockSpec(tile, im)
-
-    def neighbor_spec(self, block_shape, j: int) -> pl.BlockSpec:
-        """BlockSpec for the j-th halo operand
+    def neighbor_index(self, j: int, grid_ids, refs=()):
+        """(row, col) tile index of the j-th halo operand
         (``compact.NEIGHBOR_OFFSETS8`` order, j in [0, 8): N/S/W/E then
         the corners): the embedded neighbour (super)block clamped into
         range, or -- under compact storage -- its lambda^-1-resolved
@@ -398,39 +413,48 @@ class GridPlan:
         neighbours; the kernel masks those contributions)."""
         from .compact import NEIGHBOR_OFFSETS8
         dx, dy = NEIGHBOR_OFFSETS8[j]
-        tile = self.supertile_shape(block_shape)
         if self.storage == "embedded":
             nbx, nby = self.sched_domain.bounding_box
-
-            def place(bx, by):
-                return (jnp.clip(by + dy, 0, nby - 1),
-                        jnp.clip(bx + dx, 0, nbx - 1))
-            return self.block_spec(tile, place)
-        nsp = self.num_scalar_prefetch
+            _, bx, by = self._decode(grid_ids, refs)
+            bx, by = self._place_coords(bx, by, refs)
+            return (jnp.clip(by + dy, 0, nby - 1),
+                    jnp.clip(bx + dx, 0, nbx - 1))
         if self.lowering == "prefetch_lut":
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                t = grid_ids[len(self.batch_dims)]
-                lut_ref = refs[-1]
-                return (lut_ref[t, _LUT_NBR + 3 * j + 1],
-                        lut_ref[t, _LUT_NBR + 3 * j])
-        elif self._tiling is not None:
-            tiling = self._tiling
+            t = grid_ids[len(self.batch_dims)]
+            lut_ref = refs[-1]
+            return (lut_ref[t, _LUT_NBR + 3 * j + 1],
+                    lut_ref[t, _LUT_NBR + 3 * j])
+        _, bx, by = self._decode(grid_ids, refs)
+        if self._tiling is not None:
+            tx, ty, _ok = self._tiling.neighbor_tile(bx, by, dx, dy)
+            return ty, tx
+        sx, sy, _ok = self.layout.neighbor_slot(bx, by, dx, dy)
+        return sy, sx
 
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                _, bx, by = self._decode(grid_ids, refs)
-                tx, ty, _ok = tiling.neighbor_tile(bx, by, dx, dy)
-                return ty, tx
-        else:
-            layout = self.layout
+    def _index_spec(self, tile, index_fn) -> pl.BlockSpec:
+        """Wrap an ``(grid_ids, refs) -> block index`` function as a
+        BlockSpec with this plan's index-map arity."""
+        nsp = self.num_scalar_prefetch
 
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                _, bx, by = self._decode(grid_ids, refs)
-                sx, sy, _ok = layout.neighbor_slot(bx, by, dx, dy)
-                return sy, sx
+        def im(*args):
+            grid_ids, refs = self._split_im_args(args, nsp)
+            return index_fn(grid_ids, refs)
         return pl.BlockSpec(tile, im)
+
+    def storage_spec(self, block_shape) -> pl.BlockSpec:
+        """BlockSpec for a 2-D state-array operand under this plan's
+        storage (see :meth:`storage_index`).  ``block_shape`` is the
+        *fine* block shape; the emitted spec's block is the
+        supertile."""
+        return self._index_spec(self.supertile_shape(block_shape),
+                                self.storage_index)
+
+    def neighbor_spec(self, block_shape, j: int) -> pl.BlockSpec:
+        """BlockSpec for the j-th halo operand (see
+        :meth:`neighbor_index`)."""
+        return self._index_spec(
+            self.supertile_shape(block_shape),
+            lambda grid_ids, refs: self.neighbor_index(j, grid_ids, refs))
 
     # -- in-kernel accessor -------------------------------------------------
 
@@ -441,7 +465,8 @@ class GridPlan:
         first = grid_ids[0] == 0
         for g in grid_ids[1:]:
             first = first & (g == 0)
-        return BlockCoords(batch, bx, by, valid, first)
+        return BlockCoords(batch, bx, by, valid, first, grid_ids,
+                           prefetch_refs)
 
     def _step_valid(self, grid_ids, bx, by, prefetch_refs=()):
         """The membership/ownership predicate of one grid step (``None``
@@ -456,58 +481,46 @@ class GridPlan:
     def pallas_call(self, kernel: Callable, *, in_specs, out_specs,
                     out_shape, scratch_shapes=(),
                     input_output_aliases: Optional[dict] = None,
-                    interpret: bool = False, **kwargs) -> Callable:
-        """Wrap ``pl.pallas_call`` for this plan.
-
-        ``kernel(coords, *refs)`` is lowering-agnostic; the wrapper
-        injects the decoded :class:`BlockCoords`, prepends the
-        scalar-prefetch operands the plan needs (the decode LUT under
-        ``prefetch_lut``; the sharded planner adds its per-device shard
-        table), shifting any ``input_output_aliases`` accordingly, and
-        selects the plain grid vs ``PrefetchScalarGridSpec`` path.
-
-        When :meth:`bound_prefetch` returns tables, the returned
-        callable takes just the array operands; when it returns ``None``
-        the caller must pass the prefetch operands first (sharded plans,
-        whose tables are per-device shard_map operands)."""
-        # normalize None-vs-{} once so every lowering sees the same
-        # (possibly shifted) alias dict
-        aliases = {int(i): int(o)
-                   for i, o in (input_output_aliases or {}).items()}
-        nsp = self.num_scalar_prefetch
-        if nsp:
-            def wrapped(*args):
-                refs = args[nsp:]
-                kernel(self.kernel_coords(*args[:nsp]), *refs)
-
-            grid_spec = pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=nsp,
-                grid=self.grid,
-                in_specs=list(in_specs),
-                out_specs=out_specs,
-                scratch_shapes=list(scratch_shapes),
-            )
-            # operand indices count the prefetch tables as inputs 0..nsp
-            aliases = {i + nsp: o for i, o in aliases.items()}
-            call = pl.pallas_call(
-                wrapped, grid_spec=grid_spec, out_shape=out_shape,
-                input_output_aliases=aliases, interpret=interpret,
-                **kwargs)
-            bound = self.bound_prefetch()
-            if bound is None:
-                return lambda *operands: call(*operands)
-            return lambda *operands: call(*bound, *operands)
-
-        def wrapped(*refs):
-            kernel(self.kernel_coords(), *refs)
-
-        call = pl.pallas_call(
-            wrapped, grid=self.grid, in_specs=list(in_specs),
-            out_specs=out_specs, out_shape=out_shape,
-            scratch_shapes=list(scratch_shapes),
-            input_output_aliases=aliases,
+                    interpret: Optional[bool] = None,
+                    **kwargs) -> Callable:
+        """Emit the ``pl.pallas_call`` for this plan on its
+        :class:`~repro.core.backend.BackendTarget` (see
+        :func:`repro.core.backend.emit`, which owns all grid-spec
+        construction).  ``kernel(coords, *refs)`` is lowering- and
+        backend-agnostic at the signature level; gpu-structured kernels
+        additionally address state through ``coords.grid_ids`` /
+        ``coords.refs`` and :meth:`storage_index` /
+        :meth:`neighbor_index`.  ``interpret=None`` defers to the
+        target's interpret flag (an explicit bool overrides, for
+        tests)."""
+        return backend_lib.emit(
+            self, kernel, in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, scratch_shapes=scratch_shapes,
+            input_output_aliases=input_output_aliases,
             interpret=interpret, **kwargs)
-        return lambda *operands: call(*operands)
+
+    # -- grid-step helpers for gpu-structured kernels ------------------------
+
+    @property
+    def steps_per_launch(self) -> int:
+        """Grid steps per batch element (the domain grid volume): the
+        partial-result axis gpu-structured reductions emit, one slot
+        per step, before the deterministic host-side combine."""
+        nb = len(self.batch_dims)
+        out = 1
+        for d in self.grid[nb:]:
+            out *= int(d)
+        return out
+
+    def linear_step(self, grid_ids):
+        """Flatten the (possibly 2-D, under ``bounding``) domain grid
+        indices of one step to a linear step id in
+        [0, steps_per_launch)."""
+        nb = len(self.batch_dims)
+        if self.lowering == "bounding":
+            nbx = int(self.grid[nb + 1])
+            return grid_ids[nb] * nbx + grid_ids[nb + 1]
+        return grid_ids[nb]
 
     # -- host-side geometry helpers ----------------------------------------
 

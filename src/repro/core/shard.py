@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from . import memo
 from .compact import NEIGHBOR_OFFSETS8
 from .domain import BlockDomain
 from .plan import _LUT_NBR, GridPlan
@@ -191,9 +192,10 @@ class ShardedPlan(GridPlan):
 
     def __init__(self, domain: BlockDomain, lowering: str = "closed_form",
                  batch_dims: Sequence[int] = (), storage: str = "embedded",
-                 coarsen: int = 1, *, mesh: Mesh, axis: str,
+                 coarsen: int = 1, backend=None, *, mesh: Mesh, axis: str,
                  partition: Optional[str] = None, halo: bool = False):
-        super().__init__(domain, lowering, batch_dims, storage, coarsen)
+        super().__init__(domain, lowering, batch_dims, storage, coarsen,
+                         backend)
         self.mesh, self.axis = mesh, axis
         self.num_shards = int(mesh.shape[axis])
         if partition is None:
@@ -220,7 +222,10 @@ class ShardedPlan(GridPlan):
             self._count = np.minimum(
                 N - lo, self.rpd * self.ncols).clip(min=0)
             self.steps_per_shard = self.rpd * self.ncols
-            self.halo = HaloPlan(self, with_halo=halo)
+            self.halo = memo.cached(
+                "halo-plan", domain,
+                (self.storage, self.coarsen, D, bool(halo)),
+                lambda: HaloPlan(self, with_halo=halo))
         elif partition == "rows":
             nbx, nby = self.sched_domain.bounding_box
             by = self.sched_domain.coords_host()[:, 1]
@@ -297,15 +302,24 @@ class ShardedPlan(GridPlan):
     # -- per-device tables ---------------------------------------------------
 
     def shard_table_host(self) -> np.ndarray:
-        """(D, L) i32: one shard-table row per device (see SHARD_*)."""
-        D = self.num_shards
+        """(D, L) i32: one shard-table row per device (see SHARD_*);
+        memoized per (domain, plan axes, D, partition, halo)."""
+        return memo.cached(
+            "shard-table", self.domain,
+            (self.storage, self.coarsen, self.num_shards, self.partition,
+             self.halo.h_max if self.halo is not None else -1),
+            self._shard_table_host)
+
+    def _shard_table_host(self) -> np.ndarray:
         cols = [self._row_lo_col(), self._count]
         if self.partition == "rows":
             cols.append(self._row_lo)
         tbl = np.stack([np.asarray(c, np.int64) for c in cols], -1)
         if self.partition == "storage-rows":
             tbl = np.concatenate([tbl, self.halo.ghost_map], axis=1)
-        return tbl.astype(np.int32)
+        tbl = tbl.astype(np.int32)
+        tbl.setflags(write=False)
+        return tbl
 
     def _row_lo_col(self):
         if self.partition == "storage-rows":
@@ -317,9 +331,15 @@ class ShardedPlan(GridPlan):
         the parent LUT re-ordered into each device's enumeration order,
         chunked per device and padded (pad rows repeat the chunk head so
         every read stays in-range; validity comes from the shard table's
-        count)."""
+        count).  Memoized per (domain, plan axes, D, partition)."""
         if self.lowering != "prefetch_lut":
             return None
+        return memo.cached(
+            "shard-lut", self.domain,
+            (self.storage, self.coarsen, self.num_shards, self.partition),
+            self._lut_sharded_host)
+
+    def _lut_sharded_host(self) -> np.ndarray:
         base = GridPlan.lut_host(self)
         if self.partition == "storage-rows":
             if self._tiling is not None:
@@ -337,7 +357,9 @@ class ShardedPlan(GridPlan):
             fill = base[lo] if c else base[0]
             out[d] = fill
             out[d, :c] = base[lo:lo + c]
-        return out.reshape(self.num_shards * per, base.shape[1])
+        out = out.reshape(self.num_shards * per, base.shape[1])
+        out.setflags(write=False)
+        return out
 
     # -- GridPlan overrides --------------------------------------------------
 
@@ -435,64 +457,48 @@ class ShardedPlan(GridPlan):
         return (li >= sref[SHARD_LO]) \
             & (li < sref[SHARD_LO] + sref[SHARD_COUNT])
 
-    # -- storage-array specs (local slab addressing) -------------------------
+    # -- storage-array tile indices (local slab addressing) ------------------
 
-    def storage_spec(self, block_shape):
+    def storage_index(self, grid_ids, refs=()):
+        """Local-slab tile index of the state operand (shared by the
+        BlockSpec index maps and the gpu-structured kernel bodies, as
+        in :meth:`GridPlan.storage_index`)."""
         if self.storage == "embedded":
-            return super().storage_spec(block_shape)
-        from jax.experimental import pallas as pl
-        tile = self.supertile_shape(block_shape)
-        nsp = self.num_scalar_prefetch
+            return super().storage_index(grid_ids, refs)
         if self.lowering == "bounding":
-            def im(*args):
-                grid_ids, refs = self._split_im_args(args, nsp)
-                _, bx, by = self._decode(grid_ids, refs)
-                row = jnp.clip(self._storage_row(bx, by), 0,
-                               self.nrows_pad - 1)
-                loc = jnp.clip(refs[0][SHARD_GMAP + row], 0, self.rpd - 1)
-                col = self._storage_col(bx, by)
-                return loc, col
-        else:
-            # the sharded enumerations are slab-row-major: the step
-            # index addresses the local slab directly
-            def im(*args):
-                grid_ids, _ = self._split_im_args(args, nsp)
-                t = grid_ids[len(self.batch_dims)]
-                return t // self.ncols, t % self.ncols
-        return pl.BlockSpec(tile, im)
+            _, bx, by = self._decode(grid_ids, refs)
+            row = jnp.clip(self._storage_row(bx, by), 0,
+                           self.nrows_pad - 1)
+            loc = jnp.clip(refs[0][SHARD_GMAP + row], 0, self.rpd - 1)
+            return loc, self._storage_col(bx, by)
+        # the sharded enumerations are slab-row-major: the step index
+        # addresses the local slab directly
+        t = grid_ids[len(self.batch_dims)]
+        return t // self.ncols, t % self.ncols
 
     def _storage_col(self, bx, by):
         if self._tiling is not None:
             return self._tiling.tile_index(bx, by)[0]
         return self.layout.slot(bx, by)[0]
 
-    def neighbor_spec(self, block_shape, j: int):
+    def neighbor_index(self, j: int, grid_ids, refs=()):
         if self.storage == "embedded":
-            return super().neighbor_spec(block_shape, j)
-        from jax.experimental import pallas as pl
+            return super().neighbor_index(j, grid_ids, refs)
         dx, dy = NEIGHBOR_OFFSETS8[j]
-        tile = self.supertile_shape(block_shape)
-        nsp = self.num_scalar_prefetch
-
-        def im(*args):
-            grid_ids, refs = self._split_im_args(args, nsp)
-            sref = refs[0]
-            if self.lowering == "prefetch_lut":
-                t = grid_ids[len(self.batch_dims)]
-                lut_ref = refs[1]
-                nsx = lut_ref[t, _LUT_NBR + 3 * j]
-                nsy = lut_ref[t, _LUT_NBR + 3 * j + 1]
+        sref = refs[0]
+        if self.lowering == "prefetch_lut":
+            t = grid_ids[len(self.batch_dims)]
+            lut_ref = refs[1]
+            nsx = lut_ref[t, _LUT_NBR + 3 * j]
+            nsy = lut_ref[t, _LUT_NBR + 3 * j + 1]
+        else:
+            _, bx, by = self._decode(grid_ids, refs)
+            if self._tiling is not None:
+                nsx, nsy, _ok = self._tiling.neighbor_tile(bx, by, dx, dy)
             else:
-                _, bx, by = self._decode(grid_ids, refs)
-                if self._tiling is not None:
-                    nsx, nsy, _ok = self._tiling.neighbor_tile(
-                        bx, by, dx, dy)
-                else:
-                    nsx, nsy, _ok = self.layout.neighbor_slot(
-                        bx, by, dx, dy)
-            row = jnp.clip(nsy, 0, self.nrows_pad - 1)
-            return sref[SHARD_GMAP + row], nsx
-        return pl.BlockSpec(tile, im)
+                nsx, nsy, _ok = self.layout.neighbor_slot(bx, by, dx, dy)
+        row = jnp.clip(nsy, 0, self.nrows_pad - 1)
+        return sref[SHARD_GMAP + row], nsx
 
     # -- ownership masks for the embedded psum combine -----------------------
 

@@ -157,6 +157,24 @@ def _with_backend(params: dict) -> dict:
     return p
 
 
+def target_params(params: dict, target) -> dict:
+    """Qualify a tuning key with the emission target
+    (:mod:`repro.core.backend`), so e.g. a gpu-interpret winner never
+    answers for the tpu-interpret structure and vice versa.  ``target``
+    may be a BackendTarget, a name, or None (= the process default,
+    resolved here).  The reference point is the bare *platform* default
+    -- not the process default -- because the cache file is shared
+    across processes: a run steered onto another target via
+    ``REPRO_BACKEND``/``set_default`` must stamp its entries even
+    though that target is its own default.  True platform-default
+    entries keep the unqualified key, so existing caches stay valid."""
+    from . import backend as backend_lib
+    target = backend_lib.resolve(target)
+    if target == backend_lib.platform_default():
+        return params
+    return {**params, "target": target.name}
+
+
 def shard_params(params: dict, mesh, shard_axis: str) -> dict:
     """Qualify a tuning key with the shard count a kernel will actually
     run at (``mesh.shape[shard_axis]``), so a single-device winner never
@@ -188,17 +206,27 @@ def measure(fn: Callable, *args, warmup: int = MEASURE_WARMUP,
     return float(np.median(samples))
 
 
+def _axis_distance(a: dict, b: dict) -> int:
+    """How many knobs two configs disagree on (missing = default)."""
+    return sum(1 for k in set(a) | set(b) if a.get(k) != b.get(k))
+
+
 def autotune(kernel: str, params: dict, candidates: Iterable[dict],
              build: Callable[[dict], Callable], *,
              cache: Optional[TuneCache] = None, force: bool = False,
              warmup: int = MEASURE_WARMUP, iters: int = MEASURE_ITERS,
-             verbose: bool = False):
+             verbose: bool = False, seed_config: Optional[dict] = None):
     """Generic search: measure every viable candidate, persist the winner.
 
     ``build(config)`` returns a zero-arg measurable callable, or raises
     ValueError / NotImplementedError to declare the candidate inviable
     for this problem (e.g. fuse > supertile, coarsen on a non-fractal
     domain) -- inviable candidates are skipped, not errors.
+
+    ``seed_config`` warm-starts the search from a related problem's
+    winner (e.g. the D=1 cache entry seeding a D>1 search): only the
+    seed and its one-knob neighbours are measured, seed first, instead
+    of the full cross product.
 
     Returns ``(config, us, trials)`` where trials is the full
     [(config, us)] measurement log (the hillclimb table rides on it).
@@ -209,6 +237,16 @@ def autotune(kernel: str, params: dict, candidates: Iterable[dict],
         hit = cache.get(kernel, params)
         if hit is not None:
             return hit, None, []
+    candidates = list(candidates)
+    if seed_config is not None:
+        near = [c for c in candidates
+                if _axis_distance(c, seed_config) <= 1]
+        if near:
+            near.sort(key=lambda c: _axis_distance(c, seed_config))
+            if verbose:
+                print(f"  warm-start from {seed_config}: measuring "
+                      f"{len(near)} of {len(candidates)} candidates")
+            candidates = near
     trials = []
     best_cfg, best_us = None, float("inf")
     for cfg in candidates:
@@ -301,9 +339,17 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
                 storages=ALL_STORAGES, max_fuse: int = 8,
                 max_coarsen: int = 4, cache: Optional[TuneCache] = None,
                 force: bool = False, interpret: Optional[bool] = None,
-                verbose: bool = False):
-    """Search the CA scheduling axes for (fractal, n, block, rule)."""
-    from .compact import CompactLayout
+                verbose: bool = False, backend=None, mesh=None,
+                shard_axis: str = "data"):
+    """Search the CA scheduling axes for (fractal, n, block, rule).
+
+    ``mesh=`` tunes the *sharded* run (shard-count-qualified cache
+    key), warm-started from the D=1 winner when one is cached: only the
+    D=1 config and its one-knob neighbours are re-measured instead of
+    the full cross product (the fuse/coarsen landscape moves little
+    with D; the lowering sometimes flips).  ``backend=`` tunes a
+    non-default emission target under its own qualified key."""
+    from .compact import compact_layout
     from .domain import make_fractal_domain
     from repro.kernels.sierpinski_ca import ca_run
 
@@ -317,7 +363,7 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
     operands = {"embedded": (jnp.asarray(state), jnp.zeros((n, n),
                                                            jnp.float32))}
     if "compact" in storages:
-        lay = CompactLayout(dom)
+        lay = compact_layout(dom)
         operands["compact"] = (lay.pack(operands["embedded"][0], block),
                                lay.pack(operands["embedded"][1], block))
 
@@ -328,17 +374,24 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
             return ca_run(a, b, steps, rule=rule, block=block,
                           grid_mode=cfg["lowering"],
                           storage=cfg["storage"], n=n, fuse=cfg["fuse"],
-                          coarsen=cfg["coarsen"], interpret=interpret,
-                          donate=False)
+                          coarsen=cfg["coarsen"], backend=backend,
+                          interpret=interpret, donate=False, mesh=mesh,
+                          shard_axis=shard_axis)
         return fn
 
-    params = _axis_param(
+    base = _axis_param(
         {"fractal": fractal, "n": n, "block": block, "rule": rule},
         "storages", storages, ALL_STORAGES)
+    base = target_params(base, backend)
+    params = shard_params(base, mesh, shard_axis)
+    seed = None
+    if mesh is not None:
+        # warm-start the D>1 search from the single-device winner
+        seed = best("ca", base, cache=cache)
     cands = ca_candidates(fractal, n, block, storages=storages,
                           max_fuse=max_fuse, max_coarsen=max_coarsen)
     return autotune("ca", params, cands, build, cache=cache, force=force,
-                    verbose=verbose)
+                    verbose=verbose, seed_config=seed)
 
 
 def write_candidates(fractal: str, n: int, block: int, *,
@@ -357,9 +410,12 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
                    max_coarsen: int = 4,
                    cache: Optional[TuneCache] = None, force: bool = False,
                    interpret: Optional[bool] = None,
-                   verbose: bool = False):
-    """Search lowering x storage x coarsen for the write microbenchmark."""
-    from .compact import CompactLayout
+                   verbose: bool = False, backend=None, mesh=None,
+                   shard_axis: str = "data"):
+    """Search lowering x storage x coarsen for the write microbenchmark
+    (``mesh``/``backend`` as in :func:`autotune_ca`, incl. the D=1
+    warm start)."""
+    from .compact import compact_layout
     from .domain import make_fractal_domain
     from repro.kernels.sierpinski_write import sierpinski_write
     import jax.numpy as jnp
@@ -367,7 +423,7 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
     dom = make_fractal_domain(fractal, n // block)
     operands = {"embedded": jnp.zeros((n, n), jnp.float32)}
     if "compact" in storages:
-        operands["compact"] = CompactLayout(dom).pack(
+        operands["compact"] = compact_layout(dom).pack(
             operands["embedded"], block)
 
     def build(cfg):
@@ -378,23 +434,50 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
                                     grid_mode=cfg["lowering"],
                                     storage=cfg["storage"], n=n,
                                     coarsen=cfg["coarsen"],
-                                    interpret=interpret)
+                                    backend=backend, interpret=interpret,
+                                    mesh=mesh, shard_axis=shard_axis)
         return fn
 
-    params = _axis_param({"fractal": fractal, "n": n, "block": block},
-                         "storages", storages, ALL_STORAGES)
+    base = _axis_param({"fractal": fractal, "n": n, "block": block},
+                       "storages", storages, ALL_STORAGES)
+    base = target_params(base, backend)
+    params = shard_params(base, mesh, shard_axis)
+    seed = best("write", base, cache=cache) if mesh is not None else None
     cands = write_candidates(fractal, n, block, storages=storages,
                              max_coarsen=max_coarsen)
     return autotune("write", params, cands, build, cache=cache,
-                    force=force, verbose=verbose)
+                    force=force, verbose=verbose, seed_config=seed)
 
 
-def flash_candidates(sq: int, sk: int, *, blocks=ALL_FLASH_BLOCKS):
+#: Triton compiler axes the gpu targets additionally search (the
+#: TPU-side analogue is the block geometry itself).
+GPU_NUM_WARPS = (2, 4, 8)
+GPU_NUM_STAGES = (1, 2, 3)
+
+
+def flash_candidates(sq: int, sk: int, *, blocks=ALL_FLASH_BLOCKS,
+                     target=None):
+    """lowering x block geometry, crossed with num_warps/num_stages
+    when tuning for a *compiled* gpu target (the Triton occupancy and
+    software-pipelining knobs; the interpreter ignores them, so the
+    emulated gpu target keeps the plain axes).  ``target`` accepts a
+    BackendTarget, a name, or None (= the process default -- on a CUDA
+    machine the gpu axes appear without asking)."""
+    from . import backend as backend_lib
     from .plan import LOWERINGS
+    target = backend_lib.resolve(target)
+    gpu = target.kind == "gpu" and not target.interpret
     for lowering in LOWERINGS:
         for b in blocks:
             if b <= min(sq, sk) and sq % b == 0 and sk % b == 0:
-                yield {"lowering": lowering, "block_q": b, "block_k": b}
+                base = {"lowering": lowering, "block_q": b, "block_k": b}
+                if not gpu:
+                    yield base
+                    continue
+                for nw in GPU_NUM_WARPS:
+                    for ns in GPU_NUM_STAGES:
+                        yield {**base, "num_warps": nw,
+                               "num_stages": ns}
 
 
 def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
@@ -402,8 +485,9 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
                    sk: Optional[int] = None, d: int = 64, window: int = 0,
                    blocks=(64, 128, 256), cache: Optional[TuneCache] = None,
                    force: bool = False, interpret: Optional[bool] = None,
-                   verbose: bool = False):
-    """Search lowering x block geometry for the flash-attention kernel."""
+                   verbose: bool = False, backend=None):
+    """Search lowering x block geometry (x num_warps/num_stages on a
+    compiled gpu target) for the flash-attention kernel."""
     from repro.kernels.flash_attention import flash_attention
     import jax.numpy as jnp
 
@@ -420,16 +504,19 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
                                    block_q=cfg["block_q"],
                                    block_k=cfg["block_k"],
                                    grid_mode=cfg["lowering"],
-                                   interpret=interpret)
+                                   num_warps=cfg.get("num_warps"),
+                                   num_stages=cfg.get("num_stages"),
+                                   backend=backend, interpret=interpret)
         return fn
 
-    params = _axis_param(
+    params = target_params(_axis_param(
         {"kind": kind, "batch": batch, "heads": heads,
          "kv_heads": kv_heads, "sq": sq, "sk": sk, "d": d,
          "window": window},
-        "blocks", blocks, ALL_FLASH_BLOCKS)
-    return autotune("flash", params, flash_candidates(sq, sk,
-                                                      blocks=blocks),
+        "blocks", blocks, ALL_FLASH_BLOCKS), backend)
+    return autotune("flash", params,
+                    flash_candidates(sq, sk, blocks=blocks,
+                                     target=backend),
                     build, cache=cache, force=force, verbose=verbose)
 
 

@@ -43,8 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import backend as backend_lib
+from repro.core.backend import full_spec
 from repro.core.compact import key_block_support
 from repro.core.domain import make_attention_domain
 from repro.core.plan import GridPlan, normalize_storage
@@ -60,10 +61,62 @@ def _row_bounds(kind, qb, m_k, wb, off_b):
     return 0 * qb, qb * 0 + (m_k - 1)  # full
 
 
-def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                 *, kind, window, scale, block_q, block_k, m_k, wb, off):
+def _attn_tile_update(q, k, v, acc, m_prev, l_prev, *, kind, window, qb,
+                      kb, block_q, block_k, off, seq_pos=None):
+    """One online-softmax step over the (qb, kb) tile -- the kernel
+    math shared by both emission structures (TPU scratch refs, GPU loop
+    carries).  ``q`` is pre-scaled f32; k/v are f32 tiles.  ``seq_pos``
+    (run-time scalar) additionally masks keys beyond the current decode
+    position."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    mask = None
+    kpos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    if kind in ("causal", "local"):
+        # decode convention: query row qb covers embedded token
+        # positions off + qb*block_q + [0, block_q)
+        qpos = off + qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        mask = kpos <= qpos
+        if kind == "local":
+            mask &= kpos > qpos - window
+    if seq_pos is not None:
+        pm = kpos <= seq_pos
+        if kind == "full" and window:
+            # run-time sliding window anchored at the decode position
+            pm &= kpos > seq_pos - window
+        mask = pm if mask is None else mask & pm
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def _attn_kernel(coords, *refs, kind, window, scale, block_q, block_k,
+                 m_k, wb, off, has_pos):
+    """Block-indexed (TPU) attention kernel: one (qb, kb) tile per grid
+    step, online-softmax state in VMEM scratch across the sequential
+    grid."""
+    if has_pos:
+        q_ref, k_ref, v_ref, pos_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
     kb, qb = coords.bx, coords.by
     start, end = _row_bounds(kind, qb, m_k, wb, off // block_q)
+    pos = None
+    if has_pos:
+        pos = pos_ref[0]
+        end = jnp.minimum(end, pos // block_k)
+        if kind == "full" and window:
+            start = jnp.maximum(
+                start, jnp.maximum(pos - window + 1, 0) // block_k)
 
     def body():
         @pl.when(kb == start)
@@ -75,29 +128,11 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
         v = v_ref[0, 0].astype(jnp.float32)                # (bk, d)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-
-        if kind in ("causal", "local"):
-            # decode convention: query row qb covers embedded token
-            # positions off + qb*block_q + [0, block_q)
-            qpos = off + qb * block_q + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 0)
-            kpos = kb * block_k + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 1)
-            mask = kpos <= qpos
-            if kind == "local":
-                mask &= kpos > qpos - window
-            s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_ref[...]                                 # (bq, 1)
-        l_prev = l_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
-            p, v, preferred_element_type=jnp.float32)
+        acc_new, m_new, l_new = _attn_tile_update(
+            q, k, v, acc_ref[...], m_ref[...], l_ref[...], kind=kind,
+            window=window, qb=qb, kb=kb, block_q=block_q,
+            block_k=block_k, off=off, seq_pos=pos)
+        acc_ref[...] = acc_new
         m_ref[...] = m_new
         l_ref[...] = l_new
 
@@ -107,18 +142,149 @@ def _attn_kernel(coords, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
             l = jnp.where(l == 0, 1.0, l)
             o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
 
-    coords.when_valid(body)
+    live = None if pos is None else ((kb <= end) & (kb >= start))
+    if coords.valid is None and live is None:
+        body()
+    elif coords.valid is None:
+        pl.when(live)(body)
+    elif live is None:
+        pl.when(coords.valid)(body)
+    else:
+        pl.when(coords.valid & live)(body)
+
+
+def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
+                    wb, off, block_q, block_k, d, kind, window, scale,
+                    out_shape, dtype, s0, sk_arr, has_pos,
+                    row_extents=None, sharded=False, rows_local=None,
+                    num_warps=None, num_stages=None):
+    """gpu-structured flash attention: grid ``(batch*heads, q_rows)``,
+    one program per query-block row, an in-kernel ``fori_loop`` over
+    that row's key-block extent with the online-softmax state in loop
+    carries (parallel grids cannot persist scratch across steps).  The
+    lowering picks the extent source: ``closed_form`` computes the row
+    bounds inline, ``prefetch_lut`` reads the host-built row-extents
+    table as an HBM operand indexed by the program id, ``bounding``
+    walks the full key range and where-guards non-member tiles --
+    visiting exactly the tiles (in exactly the order) the block-indexed
+    structure visits, so results are bit-identical per lowering.
+
+    Returns ``call(*tables, q, k, v[, pos])`` where ``tables`` is the
+    row-extents operand under ``prefetch_lut`` plus the per-device
+    shard-table row when ``sharded`` (global query row = local row +
+    ``tbl[SHARD_ROWLO]``)."""
+    from repro.core.shard import SHARD_ROWLO
+
+    n_ext = 1 if lowering == "prefetch_lut" else 0
+    n_tbl = 1 if sharded else 0
+    rows = rows_local if rows_local is not None else m_q
+    kv_blocks = m_k - s0
+
+    def kern(*refs):
+        i = 0
+        ext_ref = refs[0] if n_ext else None
+        i += n_ext
+        tbl_ref = refs[i] if n_tbl else None
+        i += n_tbl
+        q_ref, k_ref, v_ref = refs[i:i + 3]
+        i += 3
+        pos_ref = refs[i] if has_pos else None
+        o_ref = refs[-1]
+
+        qb = pl.program_id(1)
+        if sharded:
+            qb = qb + tbl_ref[SHARD_ROWLO]
+        if lowering == "prefetch_lut":
+            start, end = ext_ref[qb, 0], ext_ref[qb, 1]
+        elif lowering == "bounding":
+            start, end = 0 * qb, 0 * qb + (m_k - 1)
+        else:
+            start, end = _row_bounds(kind, qb, m_k, wb, off // block_q)
+        pos = None
+        if has_pos:
+            pos = pos_ref[0]
+            end = jnp.minimum(end, pos // block_k)
+            if kind == "full" and window:
+                start = jnp.maximum(
+                    start, jnp.maximum(pos - window + 1, 0) // block_k)
+
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+
+        def load_kv(ref, kb):
+            kv = jnp.clip(kb - s0, 0, kv_blocks - 1) if s0 else kb
+            t = pl.load(ref, (pl.ds(0, 1), pl.ds(0, 1),
+                              pl.ds(kv * block_k, block_k),
+                              pl.ds(0, d)))
+            return t.reshape(block_k, d).astype(jnp.float32)
+
+        def step(j, carry):
+            kb = start + j
+            new = _attn_tile_update(
+                q, load_kv(k_ref, kb), load_kv(v_ref, kb), *carry,
+                kind=kind, window=window, qb=qb, kb=kb,
+                block_q=block_q, block_k=block_k, off=off, seq_pos=pos)
+            if lowering == "bounding" and not getattr(
+                    domain, "always_member", False):
+                ok = domain.contains(kb, qb)
+                new = tuple(jnp.where(ok, nw, old)
+                            for nw, old in zip(new, carry))
+            return new
+
+        acc0 = (jnp.zeros((block_q, d), jnp.float32),
+                jnp.full((block_q, 1), NEG_INF, jnp.float32),
+                jnp.zeros((block_q, 1), jnp.float32))
+        acc, _, l = jax.lax.fori_loop(0, end - start + 1, step, acc0)
+        l = jnp.where(l == 0, 1.0, l)
+        o_ref[0, 0, ...] = (acc / l).astype(o_ref.dtype)
+
+    def q_spec():
+        return pl.BlockSpec((1, 1, block_q, d),
+                            lambda bh, qb: (bh // h, bh % h, qb, 0))
+
+    kv_spec = pl.BlockSpec(
+        (1, 1, sk_arr, d),
+        lambda bh, qb: (bh // h, (bh % h) // group, 0, 0))
+    in_specs = []
+    if n_ext:
+        in_specs.append(full_spec(row_extents.shape))
+    if n_tbl:
+        in_specs.append(None)  # placeholder: shape known at call time
+    in_specs += [q_spec(), kv_spec, kv_spec]
+    if has_pos:
+        in_specs.append(full_spec((1,)))
+
+    interp = target.interpret
+    extra = target.call_kwargs(num_warps, num_stages)
+
+    def call(*args):
+        specs = list(in_specs)
+        if n_tbl:
+            specs[n_ext] = full_spec(args[n_ext].shape)
+        c = pl.pallas_call(
+            kern, grid=(b * h, rows), in_specs=specs,
+            out_specs=q_spec(),
+            out_shape=jax.ShapeDtypeStruct(out_shape, dtype),
+            interpret=interp, **extra)
+        return c(*args)
+
+    if n_ext:
+        ext = jnp.asarray(row_extents)
+        return lambda *args: call(ext, *args)
+    return call
 
 
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
-    "storage", "kv_seq_len", "interpret", "mesh", "shard_axis"))
-def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
-                grid_mode, storage, kv_seq_len, interpret, mesh=None,
+    "storage", "kv_seq_len", "backend", "num_warps", "num_stages",
+    "mesh", "shard_axis"))
+def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
+                block_k, grid_mode, storage, kv_seq_len, backend,
+                num_warps=None, num_stages=None, mesh=None,
                 shard_axis="data"):
     b, h, sq, d = q.shape
     _, hkv, sk_arr, _ = k.shape
     group = h // hkv
+    target = backend
     if scale is None:
         scale = float(1.0 / np.sqrt(d))
     storage = normalize_storage(storage)
@@ -144,6 +310,22 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
             raise ValueError("local: Sk - Sq must be block-aligned")
         wb = window // block_k + 1
     off = sk - sq if kind == "local" else 0
+    has_pos = seq_pos is not None
+    if has_pos and kind != "full":
+        # a band row wholly beyond seq_pos would have start > end: no
+        # step initializes the output on the sequential structure and
+        # the gpu loop runs empty -- garbage, not a defined result.
+        # Decode rides kind="full"; window= gives the run-time sliding
+        # window anchored at seq_pos.
+        raise ValueError(
+            f"seq_pos requires kind='full' (got kind={kind!r}); pass "
+            f"window= for a run-time sliding window anchored at "
+            f"seq_pos")
+    if has_pos and mesh is not None:
+        raise ValueError(
+            "seq_pos (decode) does not combine with the query-row mesh "
+            "partition; shard the batch axis instead (see "
+            "repro.models.attention.decode_attention_flash)")
 
     domain = make_attention_domain(kind, m_q, m_k, wb)
     if mesh is not None:
@@ -154,10 +336,12 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
                 f"sharded flash needs the query-block grid divisible by "
                 f"the mesh axis: m_q={m_q} blocks over {D} devices")
         plan = ShardedPlan(domain, grid_mode, batch_dims=(b * h,),
-                           mesh=mesh, axis=shard_axis, partition="rows")
+                           backend=target, mesh=mesh, axis=shard_axis,
+                           partition="rows")
         out_shape = (b, h, sq // D, d)
     else:
-        plan = GridPlan(domain, grid_mode, batch_dims=(b * h,))
+        plan = GridPlan(domain, grid_mode, batch_dims=(b * h,),
+                        backend=target)
         out_shape = q.shape
 
     # compact KV: k/v hold only the key blocks in [s0, m_k)
@@ -168,35 +352,60 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
             f"positions (support blocks [{s0}, {m_k}) of sk={sk}), got "
             f"{sk_arr}")
 
-    def q_place(bx, by, bh):
-        return (bh // h, bh % h, by, 0)
+    pos_operand = ()
+    if has_pos:
+        pos_operand = (jnp.reshape(seq_pos, (1,)).astype(jnp.int32),)
 
-    def kv_place(bx, by, bh):
-        kb = jnp.clip(bx - s0, 0, m_k - s0 - 1) if s0 else bx
-        return (bh // h, (bh % h) // group, kb, 0)
+    if not target.block_indexed:
+        lowering = plan.lowering
+        extents = plan.row_extents() if lowering == "prefetch_lut" \
+            else None
+        call = _gpu_flash_call(
+            target=target, domain=domain, lowering=lowering, b=b, h=h,
+            group=group, m_q=m_q, m_k=m_k, wb=wb, off=off,
+            block_q=block_q, block_k=block_k, d=d, kind=kind,
+            window=window, scale=scale, out_shape=out_shape,
+            dtype=q.dtype, s0=s0, sk_arr=sk_arr, has_pos=has_pos,
+            row_extents=extents, sharded=mesh is not None,
+            rows_local=(m_q // int(mesh.shape[shard_axis])
+                        if mesh is not None else None),
+            num_warps=num_warps, num_stages=num_stages)
+        if mesh is None:
+            return call(q, k, v, *pos_operand)
+    else:
+        def q_place(bx, by, bh):
+            return (bh // h, bh % h, by, 0)
 
-    kernel = functools.partial(
-        _attn_kernel, kind=kind, window=window, scale=scale,
-        block_q=block_q, block_k=block_k, m_k=m_k, wb=wb, off=off)
+        def kv_place(bx, by, bh):
+            kb = jnp.clip(bx - s0, 0, m_k - s0 - 1) if s0 else bx
+            return (bh // h, (bh % h) // group, kb, 0)
 
-    call = plan.pallas_call(
-        kernel,
-        in_specs=[
+        kernel = functools.partial(
+            _attn_kernel, kind=kind, window=window, scale=scale,
+            block_q=block_q, block_k=block_k, m_k=m_k, wb=wb, off=off,
+            has_pos=has_pos)
+
+        in_specs = [
             plan.block_spec((1, 1, block_q, d), q_place),
             plan.block_spec((1, 1, block_k, d), kv_place),
             plan.block_spec((1, 1, block_k, d), kv_place),
-        ],
-        out_specs=plan.block_spec((1, 1, block_q, d), q_place),
-        out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, d), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )
-    if mesh is None:
-        return call(q, k, v)
+        ]
+        if has_pos:
+            in_specs.append(target.scalar_spec())
+        call = plan.pallas_call(
+            kernel,
+            in_specs=in_specs,
+            out_specs=plan.block_spec((1, 1, block_q, d), q_place),
+            out_shape=jax.ShapeDtypeStruct(out_shape, q.dtype),
+            scratch_shapes=[
+                target.scratch((block_q, d), jnp.float32),
+                target.scratch((block_q, 1), jnp.float32),
+                target.scratch((block_q, 1), jnp.float32),
+            ],
+            num_warps=num_warps, num_stages=num_stages,
+        )
+        if mesh is None:
+            return call(q, k, v, *pos_operand)
 
     # shard the query-block axis: q/o split along the sequence dim,
     # k/v replicated; each device runs its contiguous query-row band
@@ -207,7 +416,13 @@ def _flash_impl(q, k, v, *, kind, window, scale, block_q, block_k,
     from repro.core.shard import device_tables
 
     axis = shard_axis
-    tbl, luts = device_tables(plan)
+    if target.block_indexed:
+        tbl, luts = device_tables(plan)
+    else:
+        # gpu structure reads only the shard-table row in-kernel (the
+        # prefetch_lut extents table is bound inside the call), so skip
+        # building/transferring the chunked decode LUT entirely
+        tbl, luts = jnp.asarray(plan.shard_table_host()), ()
     qkv_specs = (P(None, None, axis, None), P(None, None, None, None),
                  P(None, None, None, None))
 
@@ -227,7 +442,9 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     block_q: int | str = 128, block_k: int | str = 128,
                     grid_mode: str = "compact",
                     storage: str = "embedded",
-                    kv_seq_len: int | None = None,
+                    kv_seq_len: int | None = None, seq_pos=None,
+                    backend=None, num_warps: int | str | None = None,
+                    num_stages: int | str | None = None,
                     interpret: bool | None = None, mesh=None,
                     shard_axis: str = "data"):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
@@ -244,6 +461,21 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                see :func:`repro.core.compact.pack_kv`).  When the
                support is a strict suffix (rectangular local), pass the
                true key length as ``kv_seq_len``.
+    seq_pos:   run-time () int32 decode position (requires
+               ``kind="full"``; combine with ``window=`` for a
+               run-time sliding window): keys at ``kpos > seq_pos``
+               are masked and key blocks beyond ``seq_pos // block_k``
+               are predicated off (an SMEM scalar on TPU, a regular
+               scalar operand on GPU).  The gpu structure's loop bound
+               truncates the tile *reads* too; the TPU structure's
+               static grid still pipelines every tile and skips only
+               their compute.
+    backend:   emission target ("tpu" | "gpu" | "*-interpret" | None =
+               platform default; see :mod:`repro.core.backend`).  The
+               gpu structure runs one program per query-block row with
+               an in-kernel loop over its key extent; ``num_warps`` /
+               ``num_stages`` ("auto" = tuned) reach the Triton
+               compiler on real GPUs.
     causal requires Sq == Sk; local accepts Sq < Sk with the decode
     convention (queries are the last Sq positions) when
     Sk - Sq >= window (full window per query block).
@@ -254,25 +486,31 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     softmax never crosses devices and results are bit-identical); k/v
     stay replicated.  Requires Sq/block_q divisible by the axis size.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
 
     from .sierpinski_write import resolve_auto_schedule
     b, h, sq, d = q.shape
     _, hkv, _, _ = k.shape
     sk = kv_seq_len if kv_seq_len is not None else k.shape[2]
-    grid_mode, block_q, block_k = resolve_auto_schedule(
-        "flash",
-        tune.shard_params(
-            {"kind": kind, "batch": b, "heads": h, "kv_heads": hkv,
-             "sq": sq, "sk": sk, "d": d, "window": window},
-            mesh, shard_axis),
-        grid_mode=(grid_mode, "lowering", "closed_form"),
-        block_q=(block_q, "block_q", 128),
-        block_k=(block_k, "block_k", 128))
-    return _flash_impl(q, k, v, kind=kind, window=window, scale=scale,
-                       block_q=block_q, block_k=block_k,
+    grid_mode, block_q, block_k, num_warps, num_stages = \
+        resolve_auto_schedule(
+            "flash",
+            tune.target_params(
+                tune.shard_params(
+                    {"kind": kind, "batch": b, "heads": h,
+                     "kv_heads": hkv, "sq": sq, "sk": sk, "d": d,
+                     "window": window},
+                    mesh, shard_axis),
+                target),
+            grid_mode=(grid_mode, "lowering", "closed_form"),
+            block_q=(block_q, "block_q", 128),
+            block_k=(block_k, "block_k", 128),
+            num_warps=(num_warps, "num_warps", None),
+            num_stages=(num_stages, "num_stages", None))
+    return _flash_impl(q, k, v, seq_pos, kind=kind, window=window,
+                       scale=scale, block_q=block_q, block_k=block_k,
                        grid_mode=grid_mode, storage=storage,
-                       kv_seq_len=kv_seq_len, interpret=interpret,
+                       kv_seq_len=kv_seq_len, backend=target,
+                       num_warps=num_warps, num_stages=num_stages,
                        mesh=mesh, shard_axis=shard_axis)

@@ -50,8 +50,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import backend as backend_lib
+from repro.core.backend import full_spec
 from repro.core.compact import NEIGHBOR_OFFSETS8
 from repro.core.domain import BlockDomain
 from repro.core.plan import GridPlan
@@ -67,18 +68,23 @@ def auto_schedule(*, fractal: str = "sierpinski-gasket", n: int,
                   block: int, rule: str = "parity",
                   grid_mode: str = "auto", fuse: int | str = "auto",
                   coarsen: int | str = "auto", mesh=None,
-                  shard_axis: str = "data"):
+                  shard_axis: str = "data", target=None):
     """Resolve the (grid_mode, fuse, coarsen) schedule for a CA problem
     from the tune cache -- the exact lookup :func:`ca_run` /
     :func:`ca_step` perform, exposed so drivers can report the schedule
     they are about to run without re-deriving the cache key.  A sharded
-    run (``mesh=``) consults the shard-count-qualified key."""
+    run (``mesh=``) consults the shard-count-qualified key; a
+    non-default emission ``target`` consults the target-qualified
+    key."""
     from repro.core import tune
     return resolve_auto_schedule(
         "ca",
-        tune.shard_params(
-            {"fractal": fractal, "n": n, "block": block, "rule": rule},
-            mesh, shard_axis),
+        tune.target_params(
+            tune.shard_params(
+                {"fractal": fractal, "n": n, "block": block,
+                 "rule": rule},
+                mesh, shard_axis),
+            target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         fuse=(fuse, "fuse", 1),
         coarsen=(coarsen, "coarsen", 1))
@@ -106,18 +112,21 @@ def launch_schedule(steps: int, fuse: int) -> list:
     return [fuse] * full + ([rem] if rem else [])
 
 
-def _ca_fused_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, nw_ref,
-                     ne_ref, sw_ref, se_ref, buf_ref, steps_ref, o_ref,
-                     *, rule, alpha, block, n, plan, halo):
-    """Advance one (super)block by ``steps_ref[0] <= halo`` CA steps."""
-    TRACE_COUNTER["kernel"] += 1
+def _trapezoid_update(tiles, bx, by, steps, *, rule, alpha, block, n,
+                      plan, halo):
+    """The fused-CA math, shared by both emission structures: assemble
+    the working array from the center + 8 neighbour supertiles
+    (embedded-storage arrangement; packed fine-block arrangement under
+    compact coarsening), advance the shrinking trapezoid ``steps``
+    times, and return the output supertile in storage arrangement.
+
+    ``tiles``: 9 arrays in [center] + NEIGHBOR_OFFSETS8 order, each the
+    plan's storage-supertile shape.  ``(bx, by)``: scheduled (coarse)
+    block coords."""
     domain = plan.domain
     span = plan.coarsen * block        # embedded superblock side, cells
     h = halo
     wid = span + 2 * h                 # working (trapezoid base) side
-    bx, by = coords.bx, coords.by      # scheduled (coarse) block coords
-    nbr_refs = (n_ref, s_ref, w_ref, e_ref, nw_ref, ne_ref, sw_ref,
-                se_ref)
     tm = plan.tile_map()
 
     def embed(t):
@@ -148,99 +157,164 @@ def _ca_fused_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, nw_ref,
     # land where in the padded working array (relative offset -1/0/+1)
     _SPANS = {-1: (span - h, 0, h), 0: (0, h, span), 1: (0, span + h, h)}
 
+    P = jnp.zeros((wid, wid), tiles[0].dtype)
+    P = jax.lax.dynamic_update_slice(P, embed(tiles[0]), (h, h))
+    for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
+        e = embed(tiles[1 + j])
+        r_src, r_dst, nr = _SPANS[dy]
+        c_src, c_dst, nc = _SPANS[dx]
+        P = jax.lax.dynamic_update_slice(
+            P, e[r_src:r_src + nr, c_src:c_src + nc], (r_dst, c_dst))
+
+    iy = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 0)
+    ix = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 1)
+    gx = bx * span - h + ix
+    gy = by * span - h + iy
+    inr = (gx >= 0) & (gx < n) & (gy >= 0) & (gy < n)
+    gxc = jnp.clip(gx, 0, n - 1)
+    gyc = jnp.clip(gy, 0, n - 1)
+    # contributions are discarded at fine-*block* granularity (the
+    # unfused kernel's nbr_ok), values at *cell* granularity: a
+    # member block's non-member cells pass raw into the first
+    # neighbour sum (zero by the CA invariant) and are re-zeroed by
+    # the output mask every step.
+    cell_ok = inr & domain.cell_member(gxc, gyc, n)
+    block_ok = inr & domain.contains(gxc // block, gyc // block)
+    P = jnp.where(block_ok, P, 0)
+
+    zrow = jnp.zeros((1, wid), P.dtype)
+    zcol = jnp.zeros((wid, 1), P.dtype)
+
+    def nsum_of(a):
+        up = jnp.concatenate([zrow.astype(a.dtype), a[:-1, :]], 0)
+        down = jnp.concatenate([a[1:, :], zrow.astype(a.dtype)], 0)
+        left = jnp.concatenate([zcol.astype(a.dtype), a[:, :-1]], 1)
+        right = jnp.concatenate([a[:, 1:], zcol.astype(a.dtype)], 1)
+        return up + down + left + right
+
+    if rule == "parity":
+        def one(pv):
+            return jnp.where(cell_ok, jnp.mod(pv + nsum_of(pv), 2), 0)
+    else:  # diffusion: graph Laplacian over member neighbours
+        deg = nsum_of(cell_ok.astype(P.dtype))
+        al = jnp.asarray(alpha, P.dtype)
+
+        def one(pv):
+            new = pv + al * (nsum_of(pv) - deg * pv)
+            return jnp.where(cell_ok, new, 0)
+
+    P2 = jax.lax.fori_loop(0, steps, lambda i, pv: one(pv), P)
+    return unembed(P2[h:h + span, h:h + span])
+
+
+def _ca_fused_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, nw_ref,
+                     ne_ref, sw_ref, se_ref, buf_ref, steps_ref, o_ref,
+                     *, rule, alpha, block, n, plan, halo):
+    """Advance one (super)block by ``steps_ref[0] <= halo`` CA steps
+    (block-indexed structure: the 9 supertiles arrive as BlockSpec-fed
+    operand views)."""
+    TRACE_COUNTER["kernel"] += 1
+    nbr_refs = (n_ref, s_ref, w_ref, e_ref, nw_ref, ne_ref, sw_ref,
+                se_ref)
+
     def body():
-        P = jnp.zeros((wid, wid), c_ref.dtype)
-        P = jax.lax.dynamic_update_slice(P, embed(c_ref[...]), (h, h))
-        for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
-            e = embed(nbr_refs[j][...])
-            r_src, r_dst, nr = _SPANS[dy]
-            c_src, c_dst, nc = _SPANS[dx]
-            P = jax.lax.dynamic_update_slice(
-                P, e[r_src:r_src + nr, c_src:c_src + nc], (r_dst, c_dst))
+        tiles = [c_ref[...]] + [r[...] for r in nbr_refs]
+        o_ref[...] = _trapezoid_update(
+            tiles, coords.bx, coords.by, steps_ref[0], rule=rule,
+            alpha=alpha, block=block, n=n, plan=plan,
+            halo=halo).astype(o_ref.dtype)
 
-        iy = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 0)
-        ix = jax.lax.broadcasted_iota(jnp.int32, (wid, wid), 1)
-        gx = bx * span - h + ix
-        gy = by * span - h + iy
-        inr = (gx >= 0) & (gx < n) & (gy >= 0) & (gy < n)
-        gxc = jnp.clip(gx, 0, n - 1)
-        gyc = jnp.clip(gy, 0, n - 1)
-        # contributions are discarded at fine-*block* granularity (the
-        # unfused kernel's nbr_ok), values at *cell* granularity: a
-        # member block's non-member cells pass raw into the first
-        # neighbour sum (zero by the CA invariant) and are re-zeroed by
-        # the output mask every step.
-        cell_ok = inr & domain.cell_member(gxc, gyc, n)
-        block_ok = inr & domain.contains(gxc // block, gyc // block)
-        P = jnp.where(block_ok, P, 0)
+    coords.when_valid(body)
 
-        zrow = jnp.zeros((1, wid), P.dtype)
-        zcol = jnp.zeros((wid, 1), P.dtype)
 
-        def nsum_of(a):
-            up = jnp.concatenate([zrow.astype(a.dtype), a[:-1, :]], 0)
-            down = jnp.concatenate([a[1:, :], zrow.astype(a.dtype)], 0)
-            left = jnp.concatenate([zcol.astype(a.dtype), a[:, :-1]], 1)
-            right = jnp.concatenate([a[:, 1:], zcol.astype(a.dtype)], 1)
-            return up + down + left + right
+def _ca_fused_kernel_gpu(coords, c_ref, buf_ref, steps_ref, o_ref, *,
+                         rule, alpha, block, n, plan, halo):
+    """gpu-structured fused CA: the state arrives whole; the kernel
+    gathers the center + 8 lambda^-1-resolved neighbour supertiles with
+    computed offsets (slot indices from the plan -- an O(1) read of the
+    HBM LUT operand under ``prefetch_lut``) and stores the advanced
+    interior back at the center slot."""
+    TRACE_COUNTER["kernel"] += 1
+    th, tw = plan.supertile_shape((block, block))
+    gi, refs = coords.grid_ids, coords.refs
 
-        if rule == "parity":
-            def one(pv):
-                return jnp.where(cell_ok, jnp.mod(pv + nsum_of(pv), 2), 0)
-        else:  # diffusion: graph Laplacian over member neighbours
-            deg = nsum_of(cell_ok.astype(P.dtype))
-            al = jnp.asarray(alpha, P.dtype)
+    def load_at(iy, ix):
+        return pl.load(c_ref, (pl.ds(iy * th, th), pl.ds(ix * tw, tw)))
 
-            def one(pv):
-                new = pv + al * (nsum_of(pv) - deg * pv)
-                return jnp.where(cell_ok, new, 0)
-
-        steps = steps_ref[0]
-        P2 = jax.lax.fori_loop(0, steps, lambda i, pv: one(pv), P)
-        out = P2[h:h + span, h:h + span]
-        o_ref[...] = unembed(out).astype(o_ref.dtype)
+    def body():
+        cy, cx = plan.storage_index(gi, refs)
+        tiles = [load_at(cy, cx)]
+        for j in range(8):
+            ny, nx = plan.neighbor_index(j, gi, refs)
+            tiles.append(load_at(ny, nx))
+        out = _trapezoid_update(
+            tiles, coords.bx, coords.by, steps_ref[0], rule=rule,
+            alpha=alpha, block=block, n=n, plan=plan, halo=halo)
+        pl.store(o_ref, (pl.ds(cy * th, th), pl.ds(cx * tw, tw)),
+                 out.astype(o_ref.dtype))
 
     coords.when_valid(body)
 
 
 def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
-                  interpret):
-    """One fused pallas_call: (state, stale, steps[1]) -> new state."""
+                  in_shape=None):
+    """One fused pallas_call: (state, stale, steps[1]) -> new state.
+
+    Block-indexed targets receive nine BlockSpec views of the state;
+    gpu targets receive it whole (``in_shape``, which may be the
+    halo-extended local array under sharding) plus the stale buffer and
+    the step count as a regular scalar operand."""
     TRACE_COUNTER["build"] += 1
-    tile = plan.storage_spec((block, block))
-    in_specs = [tile]
-    in_specs += [plan.neighbor_spec((block, block), j) for j in range(8)]
-    in_specs += [tile]                                 # stale buffer
-    in_specs += [pl.BlockSpec(memory_space=pltpu.SMEM)]  # step count
+    kernel_kw = dict(rule=rule, alpha=alpha, block=block, n=n, plan=plan,
+                     halo=halo)
+    if plan.target.block_indexed:
+        tile = plan.storage_spec((block, block))
+        in_specs = [tile]
+        in_specs += [plan.neighbor_spec((block, block), j)
+                     for j in range(8)]
+        in_specs += [tile]                       # stale buffer
+        in_specs += [plan.target.scalar_spec()]  # step count
+        call = plan.pallas_call(
+            functools.partial(_ca_fused_kernel, **kernel_kw),
+            in_specs=in_specs,
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            input_output_aliases={9: 0},
+        )
+
+        def launch(a, b, steps_scalar, prefetch=()):
+            return call(*prefetch, a, a, a, a, a, a, a, a, a, b,
+                        steps_scalar)
+        return launch
+
     call = plan.pallas_call(
-        functools.partial(_ca_fused_kernel, rule=rule, alpha=alpha,
-                          block=block, n=n, plan=plan, halo=halo),
-        in_specs=in_specs,
-        out_specs=tile,
+        functools.partial(_ca_fused_kernel_gpu, **kernel_kw),
+        in_specs=[full_spec(in_shape or shape), full_spec(shape),
+                  plan.target.scalar_spec()],
+        out_specs=full_spec(shape),
         out_shape=jax.ShapeDtypeStruct(shape, dtype),
-        input_output_aliases={9: 0},
-        interpret=interpret,
+        input_output_aliases={1: 0},
     )
 
     def launch(a, b, steps_scalar, prefetch=()):
-        return call(*prefetch, a, a, a, a, a, a, a, a, a, b,
-                    steps_scalar)
+        return call(*prefetch, a, b, steps_scalar)
     return launch
 
 
 def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
                  grid_mode, fractal, storage, n, domain, coarsen,
-                 interpret):
+                 backend):
     domain, n, block, storage = resolve_storage_args(
         state, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
+                    backend=backend)
     fuse = effective_fuse(fuse, steps, block, plan.coarsen)
     sched = launch_schedule(steps, fuse)
     if not sched:
         return state
     launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
                            n=n, halo=fuse, shape=state.shape,
-                           dtype=state.dtype, interpret=interpret)
+                           dtype=state.dtype)
 
     def body(carry, per_launch):
         a, b = carry
@@ -253,7 +327,7 @@ def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
 
 
 _CA_STATIC = ("steps", "fuse", "rule", "alpha", "block", "grid_mode",
-              "fractal", "storage", "n", "domain", "coarsen", "interpret")
+              "fractal", "storage", "n", "domain", "coarsen", "backend")
 _CA_RUN_JIT = {
     False: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC),
     True: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC,
@@ -263,7 +337,7 @@ _CA_RUN_JIT = {
 
 def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
                          block, grid_mode, fractal, storage, n, domain,
-                         coarsen, interpret, mesh, shard_axis):
+                         coarsen, backend, mesh, shard_axis):
     """ca_run across a mesh axis: each device advances its share of the
     domain; compact storage is slab-sharded with a ppermute ghost-row
     exchange before every launch, embedded storage is replicated and
@@ -278,16 +352,23 @@ def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
     domain, n, block, storage = resolve_storage_args(
         state, block, fractal, storage, n, domain)
     plan = ShardedPlan(domain, grid_mode, storage=storage,
-                       coarsen=coarsen, mesh=mesh, axis=shard_axis,
-                       halo=(storage == "compact"))
+                       coarsen=coarsen, backend=backend, mesh=mesh,
+                       axis=shard_axis, halo=(storage == "compact"))
     fuse = effective_fuse(fuse, steps, block, plan.coarsen)
     sched = launch_schedule(steps, fuse)
     if not sched:
         return state
     local_shape = plan.local_storage_shape(block)
+    if storage == "compact":
+        # the center operand is the halo-extended local array
+        rpd, ru = plan.rpd, plan.row_unit
+        ext_rows = (rpd + plan.halo.h_max + 1) * ru
+        in_shape = (ext_rows, local_shape[1])
+    else:
+        in_shape = local_shape
     launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
                            n=n, halo=fuse, shape=local_shape,
-                           dtype=state.dtype, interpret=interpret)
+                           dtype=state.dtype, in_shape=in_shape)
     tbl, luts = device_tables(plan)
     sched_arr = jnp.asarray(sched, jnp.int32)
     axis = shard_axis
@@ -357,7 +438,7 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
            fractal: str = "sierpinski-gasket",
            storage: str = "embedded", n: int | None = None,
            domain: BlockDomain | None = None, coarsen: int | str = 1,
-           interpret: bool | None = None,
+           backend=None, interpret: bool | None = None,
            donate: bool | None = None, mesh=None,
            shard_axis: str = "data") -> jnp.ndarray:
     """Advance the CA ``steps`` steps and return the final state.
@@ -382,19 +463,22 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
     (per-device memory O(n^H / D) + halo) with a lambda^-1-resolved
     ppermute ghost exchange between launches; embedded state stays
     replicated and devices psum their disjoint block shares.  Both are
-    bit-identical to the single-device run."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    bit-identical to the single-device run.
+
+    ``backend`` selects the emission target ("tpu" | "gpu" |
+    "*-interpret" | None = platform default; see
+    :mod:`repro.core.backend`)."""
+    target = backend_lib.resolve(backend, interpret)
     grid_mode, fuse, coarsen = auto_schedule(
         fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
         grid_mode=grid_mode, fuse=fuse, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis)
+        shard_axis=shard_axis, target=target)
     if donate is None:
-        donate = not interpret and jax.default_backend() != "cpu"
+        donate = not target.interpret and jax.default_backend() != "cpu"
     kw = dict(steps=int(steps), fuse=fuse, rule=rule, alpha=alpha,
               block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              interpret=interpret)
+              backend=target)
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[bool(donate)](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)
@@ -407,22 +491,21 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             fractal: str = "sierpinski-gasket",
             storage: str = "embedded", n: int | None = None,
             domain: BlockDomain | None = None, coarsen: int | str = 1,
-            interpret: bool | None = None, mesh=None,
+            backend=None, interpret: bool | None = None, mesh=None,
             shard_axis: str = "data") -> jnp.ndarray:
     """One CA step (the ``steps=1`` slice of :func:`ca_run`).
 
     ``stale_buf`` must be zero outside the fractal (e.g. the state from
     two steps ago, or zeros); it is aliased to the output buffer so
     blocks a compact grid never visits remain valid."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    target = backend_lib.resolve(backend, interpret)
     grid_mode, _, coarsen = auto_schedule(
         fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
         grid_mode=grid_mode, fuse=1, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis)
+        shard_axis=shard_axis, target=target)
     kw = dict(steps=1, fuse=1, rule=rule, alpha=alpha, block=block,
               grid_mode=grid_mode, fractal=fractal, storage=storage,
-              n=n, domain=domain, coarsen=coarsen, interpret=interpret)
+              n=n, domain=domain, coarsen=coarsen, backend=target)
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[False](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)

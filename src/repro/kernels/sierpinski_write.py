@@ -1,5 +1,7 @@
-"""The paper's SS IV microbenchmark as Pallas TPU kernels, lowered
-through the unified :class:`~repro.core.plan.GridPlan` engine.
+"""The paper's SS IV microbenchmark as Pallas kernels, lowered through
+the unified :class:`~repro.core.plan.GridPlan` engine on any
+:mod:`~repro.core.backend` target (TPU Mosaic, GPU Triton, or either
+under the interpreter).
 
 Three lowerings, extending the paper's A/B to the LUT variant of the
 follow-up work:
@@ -45,6 +47,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import backend as backend_lib
+from repro.core.backend import full_spec
 from repro.core.domain import BlockDomain, make_fractal_domain
 from repro.core.plan import GridPlan, normalize_storage
 
@@ -173,31 +177,66 @@ def _write_kernel(coords, m_ref, o_ref, *, value, block, n, plan):
     coords.when_valid(body)
 
 
+def _write_kernel_gpu(coords, m_ref, o_ref, *, value, block, n, plan):
+    """gpu-structured write: the state arrives whole; the kernel
+    resolves its supertile offset itself (the plan's storage index,
+    reading the HBM LUT operand under ``prefetch_lut``) and
+    loads/stores with computed offsets."""
+    th, tw = plan.supertile_shape((block, block))
+
+    def body():
+        iy, ix = plan.storage_index(coords.grid_ids, coords.refs)
+        idx = (pl.ds(iy * th, th), pl.ds(ix * tw, tw))
+        tile = pl.load(m_ref, idx)
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
+        pl.store(o_ref, idx,
+                 jnp.where(mask, jnp.asarray(value, o_ref.dtype), tile))
+
+    coords.when_valid(body)
+
+
+def _emit_write(plan: GridPlan, shape, dtype, *, value, block, n):
+    """The write pallas_call for either emission structure: BlockSpec
+    tiles on block-indexed (TPU) targets, whole-array refs + in-kernel
+    addressing on GPU targets.  The unwritten remainder keeps the input
+    through the output alias either way."""
+    if plan.target.block_indexed:
+        spec = plan.storage_spec((block, block))
+        return plan.pallas_call(
+            functools.partial(_write_kernel, value=value, block=block,
+                              n=n, plan=plan),
+            in_specs=[spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            input_output_aliases={0: 0},
+        )
+    return plan.pallas_call(
+        functools.partial(_write_kernel_gpu, value=value, block=block,
+                          n=n, plan=plan),
+        in_specs=[full_spec(shape)],
+        out_specs=full_spec(shape),
+        out_shape=jax.ShapeDtypeStruct(shape, dtype),
+        input_output_aliases={0: 0},
+    )
+
+
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
-                                    "coarsen", "interpret"))
+                                    "coarsen", "backend"))
 def _write_impl(m, value, *, block, grid_mode, fractal, storage, n,
-                domain, coarsen, interpret):
+                domain, coarsen, backend):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
-
-    spec = plan.storage_spec((block, block))
-    call = plan.pallas_call(
-        functools.partial(_write_kernel, value=value, block=block, n=n,
-                          plan=plan),
-        in_specs=[spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(m.shape, m.dtype),
-        input_output_aliases={0: 0},
-        interpret=interpret,
-    )
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
+                    backend=backend)
+    call = _emit_write(plan, m.shape, m.dtype, value=value, block=block,
+                       n=n)
     return call(m)
 
 
 def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
-                   coarsen, mesh, shard_axis):
+                   coarsen, mesh, shard_axis, backend):
     """Shared ShardedPlan + per-device-table construction for the
     sharded write/sum drivers."""
     from repro.core.shard import ShardedPlan, device_tables
@@ -205,7 +244,8 @@ def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
     plan = ShardedPlan(domain, grid_mode, storage=storage,
-                       coarsen=coarsen, mesh=mesh, axis=shard_axis)
+                       coarsen=coarsen, backend=backend, mesh=mesh,
+                       axis=shard_axis)
     tbl, luts = device_tables(plan)
     return plan, domain, n, block, storage, tbl, luts
 
@@ -213,10 +253,10 @@ def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
-                                    "coarsen", "interpret", "mesh",
+                                    "coarsen", "backend", "mesh",
                                     "shard_axis"))
 def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
-                        n, domain, coarsen, interpret, mesh, shard_axis):
+                        n, domain, coarsen, backend, mesh, shard_axis):
     """Sharded write: each device writes its share of the domain.
     Compact storage writes its orthotope row slab in place; embedded
     storage combines the replicated per-device results with a disjoint
@@ -228,18 +268,9 @@ def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
     plan, domain, n, block, storage, tbl, luts = _sharded_setup(
         m, block=block, grid_mode=grid_mode, fractal=fractal,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis)
-    spec = plan.storage_spec((block, block))
-    call = plan.pallas_call(
-        functools.partial(_write_kernel, value=value, block=block, n=n,
-                          plan=plan),
-        in_specs=[spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(plan.local_storage_shape(block),
-                                       m.dtype),
-        input_output_aliases={0: 0},
-        interpret=interpret,
-    )
+        shard_axis=shard_axis, backend=backend)
+    call = _emit_write(plan, plan.local_storage_shape(block), m.dtype,
+                       value=value, block=block, n=n)
     axis = shard_axis
     lut_specs = tuple(P(axis, None) for _ in luts)
     if storage == "compact":
@@ -270,7 +301,7 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      fractal: str = "sierpinski-gasket",
                      storage: str = "embedded", n: int | None = None,
                      domain: BlockDomain | None = None,
-                     coarsen: int | str = 1,
+                     coarsen: int | str = 1, backend=None,
                      interpret: bool | None = None, mesh=None,
                      shard_axis: str = "data") -> jnp.ndarray:
     """Write ``value`` to every fractal cell of the (n, n) state.
@@ -279,22 +310,26 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
     auto (tune-cache lookup); fractal: any registered FractalSpec name;
     storage: embedded (m is the dense n x n array) | compact (m is the
     packed orthotope array, pass n= or domain=); coarsen: superblock
-    side in fine blocks (or "auto"); mesh/shard_axis: shard the write
-    across a mesh axis (embarrassing: disjoint block ownership, psum
-    combine under embedded storage)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    side in fine blocks (or "auto"); backend: emission target
+    ("tpu" | "gpu" | "*-interpret" | None = platform default, see
+    :mod:`repro.core.backend`); mesh/shard_axis: shard the write across
+    a mesh axis (embarrassing: disjoint block ownership, psum combine
+    under embedded storage)."""
+    target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
     grid_mode, coarsen = resolve_auto_schedule(
         "write",
-        tune.shard_params(
-            {"fractal": fractal, "n": n or m.shape[0], "block": block},
-            mesh, shard_axis),
+        tune.target_params(
+            tune.shard_params(
+                {"fractal": fractal, "n": n or m.shape[0],
+                 "block": block},
+                mesh, shard_axis),
+            target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         coarsen=(coarsen, "coarsen", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              interpret=interpret)
+              backend=target)
     if mesh is not None:
         return _write_sharded_impl(m, value, mesh=mesh,
                                    shard_axis=shard_axis, **kw)
@@ -314,33 +349,77 @@ def _sum_kernel(coords, m_ref, o_ref, *, block, n, plan):
     coords.when_valid(body)
 
 
+def _sum_kernel_gpu(coords, m_ref, o_ref, *, block, n, plan):
+    """gpu-structured sum: a parallel grid cannot revisit one
+    accumulator, so each step stores its per-tile partial at its step
+    slot; the driver reduces the slots *in step order*, reproducing the
+    sequential grid's accumulation bit-for-bit."""
+    th, tw = plan.supertile_shape((block, block))
+    t = plan.linear_step(coords.grid_ids)
+    out_idx = (pl.ds(t, 1), pl.ds(0, 1))
+    pl.store(o_ref, out_idx, jnp.zeros((1, 1), jnp.float32))
+
+    def body():
+        iy, ix = plan.storage_index(coords.grid_ids, coords.refs)
+        tile = pl.load(m_ref, (pl.ds(iy * th, th), pl.ds(ix * tw, tw)))
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
+        part = jnp.sum(jnp.where(mask, tile, 0).astype(jnp.float32))
+        pl.store(o_ref, out_idx, part.reshape(1, 1))
+
+    coords.when_valid(body)
+
+
+def _emit_sum(plan: GridPlan, shape, *, block, n):
+    """The sum pallas_call for either structure.  Returns
+    ``(call, finish)`` where ``finish`` maps the raw kernel output to
+    the (1, 1) f32 total: identity on sequential-grid targets (the
+    kernel accumulated in place), an in-step-order partials reduction
+    on parallel-grid targets."""
+    if plan.target.sequential_grid:
+        call = plan.pallas_call(
+            functools.partial(_sum_kernel, block=block, n=n, plan=plan),
+            in_specs=[plan.storage_spec((block, block))],
+            out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        )
+        return call, lambda out: out
+    steps = plan.steps_per_launch
+    call = plan.pallas_call(
+        functools.partial(_sum_kernel_gpu, block=block, n=n, plan=plan),
+        in_specs=[full_spec(shape)],
+        out_specs=full_spec((steps, 1)),
+        out_shape=jax.ShapeDtypeStruct((steps, 1), jnp.float32),
+    )
+
+    def finish(partials):
+        total = jax.lax.fori_loop(
+            0, steps, lambda i, acc: acc + partials[i, 0],
+            jnp.float32(0))
+        return total.reshape(1, 1)
+    return call, finish
+
+
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
-                                             "interpret"))
+                                             "backend"))
 def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
-              coarsen, interpret):
+              coarsen, backend):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
-    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen)
-
-    call = plan.pallas_call(
-        functools.partial(_sum_kernel, block=block, n=n, plan=plan),
-        in_specs=[plan.storage_spec((block, block))],
-        out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )
-    return call(m)[0, 0]
+    plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
+                    backend=backend)
+    call, finish = _emit_sum(plan, m.shape, block=block, n=n)
+    return finish(call(m))[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
-                                             "interpret", "mesh",
+                                             "backend", "mesh",
                                              "shard_axis"))
 def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
-                      domain, coarsen, interpret, mesh, shard_axis):
+                      domain, coarsen, backend, mesh, shard_axis):
     """Sharded sum: each device accumulates its owned blocks, one psum
     reduces across the axis.  The per-device accumulation order differs
     from the single-device grid order, so results agree to float
@@ -351,21 +430,16 @@ def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
     plan, domain, n, block, storage, tbl, luts = _sharded_setup(
         m, block=block, grid_mode=grid_mode, fractal=fractal,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis)
-    call = plan.pallas_call(
-        functools.partial(_sum_kernel, block=block, n=n, plan=plan),
-        in_specs=[plan.storage_spec((block, block))],
-        out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        interpret=interpret,
-    )
+        shard_axis=shard_axis, backend=backend)
+    local_shape = plan.local_storage_shape(block)
+    call, finish = _emit_sum(plan, local_shape, block=block, n=n)
     axis = shard_axis
     lut_specs = tuple(P(axis, None) for _ in luts)
     state_spec = P(axis, None) if storage == "compact" else P(None, None)
     a = plan.pad_rows(m, block) if storage == "compact" else m
 
     def device_fn(tbl, luts, a):
-        part = call(tbl.reshape(-1), *luts, a)
+        part = finish(call(tbl.reshape(-1), *luts, a))
         return jax.lax.psum(part, axis)
 
     out = shard_map(
@@ -380,7 +454,7 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                    fractal: str = "sierpinski-gasket",
                    storage: str = "embedded", n: int | None = None,
                    domain: BlockDomain | None = None,
-                   coarsen: int | str = 1,
+                   coarsen: int | str = 1, backend=None,
                    interpret: bool | None = None, mesh=None,
                    shard_axis: str = "data") -> jnp.ndarray:
     """f32 sum over fractal cells, sequential accumulate over the plan's
@@ -390,19 +464,21 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
     bit-identical per lowering.  ``coarsen`` changes the per-step
     reduction tile, so coarsened sums agree to float tolerance, not
     bit-exactly."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
     grid_mode, coarsen = resolve_auto_schedule(
         "write",
-        tune.shard_params(
-            {"fractal": fractal, "n": n or m.shape[0], "block": block},
-            mesh, shard_axis),
+        tune.target_params(
+            tune.shard_params(
+                {"fractal": fractal, "n": n or m.shape[0],
+                 "block": block},
+                mesh, shard_axis),
+            target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         coarsen=(coarsen, "coarsen", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              interpret=interpret)
+              backend=target)
     if mesh is not None:
         return _sum_sharded_impl(m, mesh=mesh, shard_axis=shard_axis,
                                  **kw)

@@ -102,6 +102,19 @@ def main():
                              "compact"),
                     help="GridPlan lowering for the attention block "
                          "domain (default: the arch's attn_schedule)")
+    ap.add_argument("--backend", default="",
+                    choices=("", "tpu", "gpu", "tpu-interpret",
+                             "gpu-interpret", "interpret"),
+                    help="kernel emission target for every block-space "
+                         "Pallas call (repro.core.backend; default: "
+                         "platform / REPRO_BACKEND)")
+    ap.add_argument("--decode-kernel", default="",
+                    choices=("", "xla", "blockspace"),
+                    help="decode attention path: 'blockspace' runs the "
+                         "Pallas flash kernel with the run-time seq_pos "
+                         "block skip, sharding continuous-batching slot "
+                         "groups over the mesh (default: the arch's "
+                         "setting, normally 'xla')")
     ap.add_argument("--mesh", default="",
                     help="serve on a device mesh: 'host' (all devices, "
                          "tp=1) or 'DATAxMODEL' (e.g. '4x2').  The same "
@@ -117,7 +130,17 @@ def main():
         cfg = cfg.replace(grid_lowering=args.grid_lowering)
         print(f"grid lowering: {cfg.grid_mode} "
               f"(xla schedule: {cfg.attn_schedule_resolved})")
+    if args.backend:
+        from repro.core import backend as backend_lib
+        backend_lib.set_default(args.backend)
+        print(f"kernel backend: {backend_lib.resolve(None).name}")
+    if args.decode_kernel:
+        cfg = cfg.replace(attn_decode_kernel=args.decode_kernel)
+        print(f"decode attention: {cfg.attn_decode_kernel}")
     mesh = resolve_cli_mesh(args.mesh)
+    if cfg.attn_decode_kernel == "blockspace":
+        from repro.models import attention as attn_lib
+        attn_lib.set_decode_mesh(mesh)
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
               f"devices (kernels shard over axis 'data')")

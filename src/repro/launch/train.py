@@ -172,6 +172,7 @@ class Trainer:
         act_ctx = (shard_lib.activation_specs(self.act)
                    if self.act else _nullcontext())
         with PreemptionGuard() as guard, ctx, act_ctx:
+            step = start - 1  # a restored ckpt at/past `steps` skips the loop
             for step in range(start, steps):
                 batch = self._device_batch(pipeline.next_batch())
                 t0 = time.perf_counter()
@@ -228,6 +229,12 @@ def main():
                          "tp=1) or 'DATAxMODEL' (e.g. '4x2').  Shared "
                          "by the sharding.py rules and the block-space "
                          "kernels (shard_axis 'data').")
+    ap.add_argument("--backend", default="",
+                    choices=("", "tpu", "gpu", "tpu-interpret",
+                             "gpu-interpret", "interpret"),
+                    help="kernel emission target for every block-space "
+                         "Pallas call (repro.core.backend; default: "
+                         "platform / REPRO_BACKEND)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -236,6 +243,10 @@ def main():
         cfg = cfg.replace(grid_lowering=args.grid_lowering)
         print(f"grid lowering: {cfg.grid_mode} "
               f"(xla schedule: {cfg.attn_schedule_resolved})")
+    if args.backend:
+        from repro.core import backend as backend_lib
+        backend_lib.set_default(args.backend)
+        print(f"kernel backend: {backend_lib.resolve(None).name}")
 
     tcfg = TrainConfig(
         steps=args.steps, grad_accum=args.grad_accum,

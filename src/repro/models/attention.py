@@ -292,6 +292,84 @@ def flash_attention_xla(q, k, v, *, kind="causal", window=0,
 # decode: one new token against a KV cache
 # ---------------------------------------------------------------------------
 
+#: the mesh the block-space decode path shards its continuous-batching
+#: slot groups over; set by the serving layer (``set_decode_mesh``) so
+#: the model stack stays mesh-agnostic.
+_DECODE_MESH = None
+_DECODE_AXIS = "data"
+
+
+def set_decode_mesh(mesh, axis: str = "data") -> None:
+    """Register the serving mesh for :func:`decode_attention_flash`
+    (``None`` disables sharding).  Called by ``launch/serve.py`` when a
+    mesh is in play; the next traced decode step picks it up."""
+    global _DECODE_MESH, _DECODE_AXIS
+    _DECODE_MESH = mesh
+    _DECODE_AXIS = axis
+
+
+def decode_attention_flash(q, k, v, pos, *, kind="causal", window=0,
+                           scale: Optional[float] = None,
+                           block_k: int = 128, backend=None, mesh=None,
+                           shard_axis: Optional[str] = None):
+    """Single-token decode through the block-space Pallas kernel.
+
+    q: (B,H,1,D); k,v: (B,Hkv,Smax,D) caches; pos: () current position.
+    The kernel receives ``pos`` as a run-time scalar operand (SMEM on
+    TPU, a regular operand on GPU): keys beyond ``pos`` are masked and
+    key *blocks* beyond ``pos // block_k`` are predicated off -- the
+    run-time analogue of the paper's block-space work saving.  On the
+    gpu structure the in-kernel loop bound truncates outright, so a
+    short sequence in a long cache *reads* O(pos / block_k) tiles; on
+    the TPU structure the static grid still pipelines every cache tile
+    through VMEM and only the dead blocks' compute is skipped
+    (``pl.when``), so the tile-traffic saving is gpu-only.
+    ``kind='local'`` anchors the sliding window at ``pos`` inside the
+    kernel.
+
+    ``mesh`` (default: the registered serving mesh) shards the *batch*
+    axis -- continuous-batching slot groups: each device decodes its
+    contiguous group of slots with its cache shard, embarrassingly
+    parallel (no collectives).  A batch that does not tile the mesh
+    axis runs the kernel unsharded instead; a cache length that does
+    not tile ``block_k`` falls back to the XLA
+    :func:`decode_attention`."""
+    b, h, _, d = q.shape
+    sk = k.shape[2]
+    block_k = min(block_k, sk)
+    if sk % block_k:
+        return decode_attention(q, k, v, pos, kind=kind, window=window,
+                                scale=scale)
+    w = window if kind == "local" else 0
+    kw = dict(kind="full", window=w, scale=scale, block_q=1,
+              block_k=block_k, backend=backend)
+    if mesh is None:
+        mesh = _DECODE_MESH
+    axis = shard_axis or _DECODE_AXIS
+    if mesh is None or b % int(mesh.shape[axis]):
+        return flash_attention_kernel(q, k, v, seq_pos=pos, **kw)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def device_fn(qd, kd, vd, posd):
+        return flash_attention_kernel(qd, kd, vd, seq_pos=posd[0], **kw)
+
+    batched = P(axis, None, None, None)
+    return shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(batched, batched, batched, P(None)),
+        out_specs=batched, check_rep=False)(
+            q, k, v, jnp.reshape(pos, (1,)).astype(jnp.int32))
+
+
+def flash_attention_kernel(*args, **kwargs):
+    """The Pallas kernel entry point (import indirection keeps the XLA
+    model stack importable without the kernels package in play)."""
+    from repro.kernels.flash_attention import flash_attention
+    return flash_attention(*args, **kwargs)
+
+
 def decode_attention(q, k, v, pos, *, kind="causal", window=0,
                      scale: Optional[float] = None):
     """q: (B,H,1,D); k,v: (B,Hkv,S,D) cache; pos: () current position.

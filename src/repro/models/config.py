@@ -77,6 +77,11 @@ class ModelConfig:
     # sites that invoke the Pallas kernels directly read it as
     # grid_mode via the accessor below.
     grid_lowering: str = ""
+    # decode attention path: "xla" (full masked decode_attention) or
+    # "blockspace" (the Pallas flash kernel with the run-time seq_pos
+    # block skip; shards continuous-batching slot groups over the
+    # registered serving mesh)
+    attn_decode_kernel: str = "xla"
     flash_threshold: int = 8192     # use flash custom-vjp above this seq len
     remat: bool = True
     logit_chunk: int = 0            # 0 = unchunked cross-entropy

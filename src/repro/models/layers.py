@@ -159,7 +159,10 @@ def attn_block_decode(params, x, cfg, kind, cache, pos):
         k_cache, k_new.astype(k_cache.dtype), pos, axis=2)
     v_cache = jax.lax.dynamic_update_slice_in_dim(
         v_cache, v_new.astype(v_cache.dtype), pos, axis=2)
-    o = attn_lib.decode_attention(
+    decode = (attn_lib.decode_attention_flash
+              if cfg.attn_decode_kernel == "blockspace"
+              else attn_lib.decode_attention)
+    o = decode(
         q, k_cache, v_cache, pos,
         kind=("local" if kind == "local" else "causal"),
         window=cfg.local_window)
