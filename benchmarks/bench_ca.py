@@ -113,6 +113,68 @@ def run_sched_ab(iters: int = 3, steps: int = 16, cases=((128, 8),)):
             f"speedup_vs_bounding={t_bound / t_fc:.2f}")
 
 
+def run_overlap_ab(iters: int = 3, steps: int = 8,
+                   cases=((1024, 128), (4096, 128))):
+    """Pipelining A/B: the fused CA launch with ``num_stages=2`` (DMA
+    double buffers on the TPU structure; Triton stage knob on a
+    compiled gpu) vs the synchronous ``num_stages=1`` path, at sizes
+    where tile traffic matters.  Outputs are asserted bit-identical
+    before timing.  With >= 2 devices the sharded run is also A/B'd --
+    there ``num_stages=2`` additionally overlaps the ppermute halo
+    exchange with interior compute -- and each sharded row reports the
+    ghost bytes the exchange ships (minimal strips vs the full-row
+    scheme).  ``REPRO_OVERLAP_QUICK=1`` shrinks the case list for CI
+    runners."""
+    import os
+    if os.environ.get("REPRO_OVERLAP_QUICK"):
+        cases = ((1024, 128),)
+    fuse = 8
+    print(f"# CA pipelining A/B: num_stages=2 vs synchronous "
+          f"(T={steps} parity steps, fuse={fuse})")
+    for n, block in cases:
+        mask = F.membership_grid(n)
+        rng = np.random.default_rng(0)
+        a0 = jnp.asarray((rng.integers(0, 2, (n, n)) * mask)
+                         .astype(np.float32))
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        a = lay.pack(a0, block)
+        b = jnp.zeros_like(a)
+
+        def run1(a, b, stages, mesh=None):
+            return ops.ca_run(a, b, steps, fuse=fuse, rule="parity",
+                              block=block, grid_mode="prefetch_lut",
+                              storage="compact", n=n, num_stages=stages,
+                              mesh=mesh, donate=False)
+
+        assert np.array_equal(np.asarray(run1(a, b, 1)),
+                              np.asarray(run1(a, b, 2)))
+        t_sync = time_fn(run1, a, b, 1, warmup=1, iters=iters)
+        t_pipe = time_fn(run1, a, b, 2, warmup=1, iters=iters)
+        row(f"ca_overlap/sync/n={n}/rho={block}", t_sync, "stages=1")
+        row(f"ca_overlap/pipelined/n={n}/rho={block}", t_pipe,
+            f"stages=2;speedup={t_sync / t_pipe:.2f}")
+        if jax.device_count() >= 2:
+            from repro.core.shard import ShardedPlan
+            D = jax.device_count()
+            mesh = jax.make_mesh((D,), ("data",))
+            plan = ShardedPlan(lay.domain, "prefetch_lut",
+                               storage="compact", mesh=mesh,
+                               axis="data", halo=True)
+            by = plan.halo.bytes_exchanged(plan, block, h=fuse)
+            assert np.array_equal(np.asarray(run1(a, b, 1, mesh)),
+                                  np.asarray(run1(a, b, 2, mesh)))
+            ts = time_fn(run1, a, b, 1, mesh, warmup=1, iters=iters)
+            tp = time_fn(run1, a, b, 2, mesh, warmup=1, iters=iters)
+            row(f"ca_overlap/shard_sync/D={D}/n={n}/rho={block}", ts,
+                f"stages=1;halo_bytes={by['strips']};"
+                f"halo_bytes_full_rows={by['full_rows']}")
+            row(f"ca_overlap/shard_pipelined/D={D}/n={n}/rho={block}",
+                tp, f"stages=2;halo_bytes={by['strips']};"
+                f"halo_bytes_full_rows={by['full_rows']};"
+                f"speedup={ts / tp:.2f}")
+
+
 def run_shard_ab(iters: int = 3, steps: int = 8, cases=((128, 8),)):
     """Mesh-scaling A/B: single-device ca_run vs the sharded run at
     every power-of-two device count the host exposes (compact storage

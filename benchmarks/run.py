@@ -10,10 +10,10 @@ import os
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: map,space,time,ca,sched,shard,attn,"
-                         "backend (backend = the per-target "
-                         "lambda-vs-bounding A/B rows alone; they are "
-                         "also part of map/attn)")
+                    help="comma list: map,space,time,ca,sched,shard,"
+                         "overlap,attn,backend (backend = the "
+                         "per-target lambda-vs-bounding A/B rows alone; "
+                         "they are also part of map/attn)")
     ap.add_argument("--json", default=None,
                     help="artifact path (default: BENCH_<tag>.json at "
                          "the repo root)")
@@ -40,6 +40,8 @@ def main() -> None:
         bench_ca.run_sched_ab()
     if only is None or "shard" in only:
         bench_ca.run_shard_ab()
+    if only is None or "overlap" in only:
+        bench_ca.run_overlap_ab()
     if only is None or "ca" in only:
         bench_ca.run(sched_ab=False)
     if only is None or "attn" in only:

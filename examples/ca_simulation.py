@@ -75,7 +75,7 @@ def main():
 
     # the same cache lookup ca_run performs, done here so the driver
     # can report the schedule it is about to run
-    grid_mode, fuse, coarsen = sierpinski_ca.auto_schedule(
+    grid_mode, fuse, coarsen, num_stages = sierpinski_ca.auto_schedule(
         n=n, block=args.block, rule=args.rule, grid_mode=grid_mode,
         fuse=fuse, coarsen=coarsen)
 

@@ -45,6 +45,7 @@ import os
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -85,6 +86,20 @@ class BackendTarget:
     memory_space:        where operand tiles land ("vmem" pipeline
                          copies vs "hbm" pointers) -- documentation of
                          the model each structure assumes.
+    async_copy:          kernels may issue explicit in-kernel DMA
+                         (``pltpu.make_async_copy`` + DMA semaphores,
+                         operands parked in ``pltpu.ANY``) and overlap
+                         the copy with compute.  Mosaic has DMA
+                         engines; the interpreter emulates the copies
+                         synchronously, preserving semantics.
+    pipeline_stages:     maximum useful staged-copy depth for
+                         software-pipelined streaming loops: the DMA
+                         double buffers of the TPU structure (2) and
+                         the FIFO/Triton stages of the GPU structure
+                         (4, quad buffering).  1 means the target has
+                         no software pipeline: ``resolve_stages``
+                         clamps every request back to the synchronous
+                         path.
     """
 
     name: str
@@ -96,6 +111,8 @@ class BackendTarget:
     sequential_grid: bool
     supports_scratch: bool
     memory_space: str
+    async_copy: bool
+    pipeline_stages: int
 
     # -- variants -----------------------------------------------------------
 
@@ -128,6 +145,43 @@ class BackendTarget:
                 f"reduction state in loop carries")
         return pltpu.VMEM(shape, dtype)
 
+    # -- software pipelining ------------------------------------------------
+
+    def resolve_stages(self, num_stages: Optional[int]) -> int:
+        """Clamp a requested pipeline depth to what this target can
+        stage.  ``None`` / ``"auto"`` and anything <= 1 mean the
+        synchronous path; depths beyond :attr:`pipeline_stages` clamp
+        down rather than error so a tune-cache entry from a deeper
+        target stays usable."""
+        if num_stages is None or num_stages == "auto":
+            return 1
+        return max(1, min(int(num_stages), self.pipeline_stages))
+
+    def any_spec(self) -> pl.BlockSpec:
+        """BlockSpec parking an operand un-copied (``pltpu.ANY``) so
+        the kernel streams tiles out of it with explicit DMA.  Only
+        meaningful on :attr:`async_copy` targets."""
+        if not self.async_copy:
+            raise ValueError(
+                f"target {self.name!r} has no async-copy support; "
+                f"operands must arrive via BlockSpec pipeline copies")
+        return pl.BlockSpec(memory_space=pltpu.ANY)
+
+    def dma_sems(self, shape) -> object:
+        """A scratch array of DMA-completion semaphores (one per
+        in-flight copy slot)."""
+        if not self.async_copy:
+            raise ValueError(
+                f"target {self.name!r} has no DMA semaphores")
+        return pltpu.SemaphoreType.DMA(tuple(shape))
+
+    @staticmethod
+    def start_copy(src, dst, sem):
+        """Begin ``src -> dst`` on a DMA engine; returns the copy
+        descriptor (``.wait()`` blocks on ``sem``).  The interpreter
+        performs the copy synchronously at ``start``/``wait``."""
+        return pltpu.make_async_copy(src, dst, sem)
+
     def call_kwargs(self, num_warps: Optional[int] = None,
                     num_stages: Optional[int] = None) -> dict:
         """Extra ``pl.pallas_call`` kwargs for this target (the Triton
@@ -146,7 +200,11 @@ def _mk(name, kind, interpret):
         name=name, kind=kind, interpret=interpret,
         has_scalar_prefetch=tpu, smem_scalar_params=tpu,
         block_indexed=tpu, sequential_grid=tpu, supports_scratch=tpu,
-        memory_space="vmem" if tpu else "hbm")
+        memory_space="vmem" if tpu else "hbm",
+        # capability flags are per *structure*, not per execution mode:
+        # the -interpret variants keep them so the pipelined paths are
+        # exercised (and parity-tested) without the hardware.
+        async_copy=tpu, pipeline_stages=2 if tpu else 4)
 
 
 TPU = _mk("tpu", "tpu", False)
@@ -218,6 +276,63 @@ def resolve(spec=None, interpret: Optional[bool] = None) -> BackendTarget:
     if not target.interpret and jax.default_backend() != target.kind:
         return target.emulated()
     return target
+
+
+def stream_tiles(src_ref, bufs_ref, sems, *, srcs_for, lin, total,
+                 stages):
+    """One sequential-grid step of software-pipelined tile streaming
+    (the TPU structure's async-copy double/multi buffer).
+
+    ``src_ref`` is the state parked whole in ``pltpu.ANY``;
+    ``bufs_ref`` is VMEM scratch ``(stages, n_tiles, th, tw)`` and
+    ``sems`` a matching ``(stages, n_tiles)`` DMA semaphore array.
+    ``srcs_for(step)`` returns the (tile_row, tile_col) indices of the
+    ``n_tiles`` tiles step ``step`` consumes (``step`` may be a traced
+    scalar or a static int -- prologue decodes constant-fold).
+
+    Grid step ``lin`` (of ``total``) waits on its own copies -- started
+    ``stages - 1`` steps earlier, or in the step-0 prologue -- then
+    starts the copies for step ``lin + stages - 1`` so they fly during
+    this step's compute, and returns the current tiles.  Tile indices
+    are clamped into the source's range, so prefetches past the grid
+    (and fetches of masked-off neighbour slots) read in-bounds garbage
+    that the caller's validity masking discards.  Consumption order is
+    exactly the synchronous order: results are bit-identical."""
+    n_tiles, th, tw = (int(bufs_ref.shape[1]), int(bufs_ref.shape[2]),
+                       int(bufs_ref.shape[3]))
+    nr = int(src_ref.shape[0]) // th
+    nc = int(src_ref.shape[1]) // tw
+
+    def copy(slot, j, ty, tx):
+        ty = jnp.clip(ty, 0, nr - 1)
+        tx = jnp.clip(tx, 0, nc - 1)
+        return pltpu.make_async_copy(
+            src_ref.at[pl.ds(ty * th, th), pl.ds(tx * tw, tw)],
+            bufs_ref.at[slot, j], sems.at[slot, j])
+
+    def start_all(step, slot):
+        for j, (ty, tx) in enumerate(srcs_for(step)):
+            copy(slot, j, ty, tx).start()
+
+    @pl.when(lin == 0)
+    def _():
+        # prologue: fill the first stages-1 buffer slots (static step
+        # ids, so the step-0 decode folds to constants)
+        for i in range(min(stages - 1, total)):
+            start_all(i, i)
+
+    nxt = lin + (stages - 1)
+
+    @pl.when(nxt < total)
+    def _():
+        start_all(jnp.minimum(nxt, total - 1), jax.lax.rem(nxt, stages))
+
+    slot = jax.lax.rem(lin, stages)
+    tiles = []
+    for j, (ty, tx) in enumerate(srcs_for(lin)):
+        copy(slot, j, ty, tx).wait()
+        tiles.append(bufs_ref[slot, j])
+    return tiles
 
 
 def full_spec(shape) -> pl.BlockSpec:

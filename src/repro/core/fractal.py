@@ -215,8 +215,9 @@ class FractalSpec:
         ints/numpy and inside Pallas index maps; this is the decode the
         sharded orthotope-row-slab enumeration runs (row-major over
         packed slots instead of over the linear lambda order)."""
-        where = np.where if isinstance(wx, (int, np.integer, np.ndarray)) \
-            else jnp.where
+        host = all(isinstance(v, (int, np.integer, np.ndarray))
+                   for v in (wx, wy))
+        where = np.where if host else jnp.where
         lx = wx * 0
         ly = wy * 0
         for mu in range(1, r + 1):
@@ -244,8 +245,9 @@ class FractalSpec:
         (unmatched digit pairs fall through to copy 0), which is exactly
         what a clamped compact-storage index map needs.
         """
-        where = np.where if isinstance(x, (int, np.integer, np.ndarray)) \
-            else jnp.where
+        host = all(isinstance(v, (int, np.integer, np.ndarray))
+                   for v in (x, y))
+        where = np.where if host else jnp.where
         wx = x * 0
         wy = y * 0
         px = x * 0 + 1   # k**(even-digit position)
@@ -269,8 +271,9 @@ class FractalSpec:
         """Embedded fractal coords -> linear index in lambda order (the
         inverse of :meth:`lambda_map_linear`); copy indices become the
         base-k digits of i."""
-        where = np.where if isinstance(x, (int, np.integer, np.ndarray)) \
-            else jnp.where
+        host = all(isinstance(v, (int, np.integer, np.ndarray))
+                   for v in (x, y))
+        where = np.where if host else jnp.where
         i = x * 0
         for mu in range(1, r + 1):
             p = self.m ** (mu - 1)

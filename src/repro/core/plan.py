@@ -292,6 +292,27 @@ class GridPlan:
 
     # -- the one shared decode ---------------------------------------------
 
+    def _lut_row0(self) -> Optional[np.ndarray]:
+        """Host copy of LUT row 0, when it is a trace constant (it is
+        not for sharded plans: each device's table chunk starts at a
+        different row, and the chunks are shard_map operands)."""
+        return self.lut_host()[0]
+
+    def _lut_read(self, lut_ref, t, col: int):
+        """One LUT element read.  When ``t`` is a *static* step id --
+        the DMA-pipeline prologues, which address steps 0..stages-2
+        before the grid runs -- row 0 is host-known and folds to an
+        immediate, so the first copies issue without waiting on the
+        table load (the first-iteration LUT stall).  Traced steps read
+        the table directly: a select would compute the same value but
+        perturb XLA fusion, and the lowerings are contractually
+        bit-identical."""
+        if isinstance(t, (int, np.integer)) and int(t) == 0:
+            row0 = self._lut_row0()
+            if row0 is not None:
+                return np.int32(row0[col])
+        return lut_ref[t, col]
+
     def _decode(self, grid_ids, prefetch_refs=()):
         """grid step -> (batch_ids, bx, by) in the *scheduled* (coarse)
         block space.  Shared by every operand's index map and by the
@@ -305,7 +326,8 @@ class GridPlan:
         elif self.lowering == "prefetch_lut":
             t = grid_ids[nb]
             lut_ref = prefetch_refs[-1]
-            bx, by = lut_ref[t, 0], lut_ref[t, 1]
+            bx = self._lut_read(lut_ref, t, _LUT_BX)
+            by = self._lut_read(lut_ref, t, _LUT_BY)
         else:  # closed_form
             bx, by = self.sched_domain.block_coords(grid_ids[nb])
         return batch, bx, by
@@ -396,7 +418,8 @@ class GridPlan:
         if self.lowering == "prefetch_lut":
             t = grid_ids[len(self.batch_dims)]
             lut_ref = refs[-1]
-            return lut_ref[t, _LUT_SY], lut_ref[t, _LUT_SX]
+            return (self._lut_read(lut_ref, t, _LUT_SY),
+                    self._lut_read(lut_ref, t, _LUT_SX))
         _, bx, by = self._decode(grid_ids, refs)
         if self._tiling is not None:
             tx, ty = self._tiling.tile_index(bx, by)
@@ -422,8 +445,8 @@ class GridPlan:
         if self.lowering == "prefetch_lut":
             t = grid_ids[len(self.batch_dims)]
             lut_ref = refs[-1]
-            return (lut_ref[t, _LUT_NBR + 3 * j + 1],
-                    lut_ref[t, _LUT_NBR + 3 * j])
+            return (self._lut_read(lut_ref, t, _LUT_NBR + 3 * j + 1),
+                    self._lut_read(lut_ref, t, _LUT_NBR + 3 * j))
         _, bx, by = self._decode(grid_ids, refs)
         if self._tiling is not None:
             tx, ty, _ok = self._tiling.neighbor_tile(bx, by, dx, dy)
@@ -521,6 +544,22 @@ class GridPlan:
             nbx = int(self.grid[nb + 1])
             return grid_ids[nb] * nbx + grid_ids[nb + 1]
         return grid_ids[nb]
+
+    def grid_ids_at(self, lin, batch=()):
+        """Inverse of :meth:`linear_step`: the full grid-index tuple of
+        linear domain step ``lin`` under the given batch ids.  ``lin``
+        may be traced (pipelined kernels addressing step t+s ahead of
+        the grid) or a Python int (launch prologues, where static step
+        ids let the decode constant-fold)."""
+        batch = tuple(batch)
+        if len(batch) != len(self.batch_dims):
+            raise ValueError(
+                f"expected {len(self.batch_dims)} batch ids, "
+                f"got {len(batch)}")
+        if self.lowering == "bounding":
+            nbx = int(self.grid[len(batch) + 1])
+            return batch + (lin // nbx, lin % nbx)
+        return batch + (lin,)
 
     # -- host-side geometry helpers ----------------------------------------
 

@@ -92,15 +92,31 @@ class HaloPlan:
     """Host-resolved ghost-row exchange for a storage-row partition.
 
     For each device: which global storage rows (supertile rows under
-    coarsening) its halo needs (``ghost_rows``), and per device-offset
-    ``delta`` the padded send/recv index tables a single ``ppermute``
-    round uses.  ``h_max`` ghost rows (+1 dump row for padding traffic
-    and never-needed rows) bound the halo memory.
+    coarsening) its halo needs (``ghost_rows``), and the padded
+    send/recv index tables the ``ppermute`` rounds use.  ``h_max``
+    ghost rows (+1 dump row for padding traffic and never-needed rows)
+    bound the halo memory.
+
+    Rounds are keyed (device offset ``delta``, strip class): the
+    trapezoid update reads a ``dy = +1`` neighbour's *top* ``h`` cell
+    rows and a ``dy = -1`` neighbour's *bottom* ``h`` rows (``h`` =
+    the fuse depth), so a ghost row whose readers all sit on one side
+    ships only that strip instead of its full ``row_unit`` height.
+    ``dy = 0`` readers (and packed supertiles, whose cell rows are not
+    embedded-ordered -- ``plan.tile_map() is not None``) force the
+    full row.  Unshipped strip cells stay zero and are never read by a
+    valid step.  The partition of each device's steps into *interior*
+    (all 8 neighbour rows local) and *boundary* (any ghost neighbour)
+    -- ``int_steps`` / ``bnd_steps`` -- is what lets a driver overlap
+    the exchange with interior compute (:meth:`ShardedPlan.phase_view`).
     """
 
     def __init__(self, plan: "ShardedPlan", with_halo: bool):
         D, rpd, nrows = plan.num_shards, plan.rpd, plan.nrows
         self.ghost_rows = [[] for _ in range(D)]
+        self.row_class = [dict() for _ in range(D)]
+        self.int_steps = None
+        self.bnd_steps = None
         if with_halo:
             if plan._tiling is not None:
                 own = plan._tiling.tiles_host()
@@ -109,13 +125,32 @@ class HaloPlan:
                 own = plan.layout.slots_host()
                 nbrs = plan.layout.neighbor_slots_host()
             rows = own[:, 1]
+            strips = plan.tile_map() is None
+            self.int_steps = [[] for _ in range(D)]
+            self.bnd_steps = [[] for _ in range(D)]
             for d in range(D):
                 lo, hi = d * rpd, min((d + 1) * rpd, nrows)
                 sel = (rows >= lo) & (rows < hi)
-                nb = nbrs[sel]
-                need = np.unique(nb[..., 1][nb[..., 2] == 1])
-                self.ghost_rows[d] = sorted(
-                    int(g) for g in need if not lo <= g < hi)
+                nb, mine = nbrs[sel], own[sel]
+                cls = self.row_class[d]
+                for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
+                    ok = nb[:, j, 2] == 1
+                    gr = nb[:, j, 1][ok]
+                    gr = gr[(gr < lo) | (gr >= hi)]
+                    c = "top" if strips and dy == 1 else \
+                        "bot" if strips and dy == -1 else "full"
+                    for g in np.unique(gr):
+                        cls.setdefault(int(g), set()).add(c)
+                for g, s in cls.items():
+                    if "full" in s:
+                        cls[g] = {"full"}
+                self.ghost_rows[d] = sorted(cls)
+                remote = (nb[..., 2] == 1) \
+                    & ((nb[..., 1] < lo) | (nb[..., 1] >= hi))
+                t_ids = (mine[:, 1] - lo) * plan.ncols + mine[:, 0]
+                bnd = remote.any(axis=1)
+                self.int_steps[d] = sorted(int(t) for t in t_ids[~bnd])
+                self.bnd_steps[d] = sorted(int(t) for t in t_ids[bnd])
         self.h_max = max((len(g) for g in self.ghost_rows), default=0)
         # ghost map: global row -> row of [slab ++ ghosts ++ dump]
         dump = rpd + self.h_max
@@ -128,46 +163,103 @@ class HaloPlan:
             for p, g in enumerate(self.ghost_rows[d]):
                 gmap[d, g] = rpd + p
         self.ghost_map = gmap
-        # one ppermute round per device offset delta with any traffic
-        self.deltas = []       # [(delta, send_idx (D, m), recv_pos (D, m))]
+        # ppermute rounds: one per (device offset, strip class) with
+        # any traffic
+        self.rounds = []   # [(delta, cls, send_idx (D, m), recv (D, m))]
         for delta in range(1, D):
-            needs = [[g for g in self.ghost_rows[d]
-                      if g // rpd == (d - delta) % D] for d in range(D)]
-            m = max(len(x) for x in needs)
-            if m == 0:
-                continue
-            send = np.zeros((D, m), np.int32)
-            recv = np.full((D, m), self.h_max, np.int32)  # pad -> dump
-            for d in range(D):
-                for i, g in enumerate(needs[(d + delta) % D]):
-                    send[d, i] = g - d * rpd          # local row at source
-                for i, g in enumerate(needs[d]):
-                    recv[d, i] = self.ghost_rows[d].index(g)
-            self.deltas.append((delta, send, recv))
+            for cls in ("full", "top", "bot"):
+                needs = [[g for g in self.ghost_rows[d]
+                          if g // rpd == (d - delta) % D
+                          and cls in self.row_class[d][g]]
+                         for d in range(D)]
+                m = max(len(x) for x in needs)
+                if m == 0:
+                    continue
+                send = np.zeros((D, m), np.int32)
+                recv = np.full((D, m), self.h_max, np.int32)  # pad -> dump
+                for d in range(D):
+                    for i, g in enumerate(needs[(d + delta) % D]):
+                        send[d, i] = g - d * rpd  # local row at source
+                    for i, g in enumerate(needs[d]):
+                        recv[d, i] = self.ghost_rows[d].index(g)
+                self.rounds.append((delta, cls, send, recv))
 
     def send_recv_host(self):
         """((send_0, recv_0), ...) host tables, one pair per round;
         drivers pass them into shard_map sharded along the mesh axis."""
-        return tuple((s, r) for _, s, r in self.deltas)
+        return tuple((s, r) for _, _, s, r in self.rounds)
 
-    def extend(self, plan: "ShardedPlan", local: jnp.ndarray,
-               send_recv) -> jnp.ndarray:
-        """Inside shard_map: local slab (rpd*RU, W) -> extended array
-        ((rpd + h_max + 1)*RU, W) = slab ++ exchanged ghost rows ++ a
-        zero-init dump row, via one ppermute per active delta."""
+    def _strip(self, cls: str, RU: int, h: int):
+        """(row offset, height) of one class's strip within a row."""
+        if cls == "top":
+            return 0, h
+        if cls == "bot":
+            return RU - h, h
+        return 0, RU
+
+    def exchange(self, plan: "ShardedPlan", local: jnp.ndarray,
+                 send_recv, h: Optional[int] = None) -> jnp.ndarray:
+        """Inside shard_map: run every ppermute round and return the
+        ghost block ((h_max + 1), RU, W) = exchanged ghost rows ++ a
+        zero-init dump row.  ``h`` is the strip height in cells (the
+        launch fuse depth); ``None`` ships full rows.  Independent of
+        the local compute, so a driver can launch interior work while
+        the collective is in flight and :meth:`cat` afterwards."""
         rpd, RU = plan.rpd, plan.row_unit
+        h = RU if h is None else min(int(h), RU)
         W = local.shape[-1]
         rows = local.reshape(rpd, RU, W)
         ghost = jnp.zeros((self.h_max + 1, RU, W), local.dtype)
         D = plan.num_shards
-        for (delta, _, _), (send, recv) in zip(self.deltas, send_recv):
-            payload = rows[send.reshape(-1)]
+        for (delta, cls, _, _), (send, recv) in zip(self.rounds,
+                                                    send_recv):
+            off, nr = self._strip(cls, RU, h)
+            payload = rows[send.reshape(-1), off:off + nr]
             got = jax.lax.ppermute(
                 payload, plan.axis,
                 [(s, (s + delta) % D) for s in range(D)])
-            ghost = ghost.at[recv.reshape(-1)].set(got)
+            ghost = ghost.at[recv.reshape(-1), off:off + nr].set(got)
+        return ghost
+
+    def cat(self, plan: "ShardedPlan", local: jnp.ndarray,
+            ghost: jnp.ndarray) -> jnp.ndarray:
+        """local slab (rpd*RU, W) ++ ghost block -> extended array
+        ((rpd + h_max + 1)*RU, W) the kernels address via the shard
+        table's ghost map."""
+        rpd, RU = plan.rpd, plan.row_unit
+        W = local.shape[-1]
+        rows = local.reshape(rpd, RU, W)
         return jnp.concatenate([rows, ghost], axis=0).reshape(
             (rpd + self.h_max + 1) * RU, W)
+
+    def extend(self, plan: "ShardedPlan", local: jnp.ndarray,
+               send_recv, h: Optional[int] = None) -> jnp.ndarray:
+        """exchange + cat: the synchronous (non-overlapped) path."""
+        return self.cat(plan, local, self.exchange(plan, local,
+                                                   send_recv, h))
+
+    def bytes_exchanged(self, plan: "ShardedPlan", block: int,
+                        h: Optional[int] = None,
+                        itemsize: int = 4) -> dict:
+        """Payload bytes one exchange moves across the whole mesh:
+        ``strips`` (what :meth:`exchange` ships at strip height ``h``,
+        padding included) vs ``full_rows`` (the pre-trim scheme: every
+        ghost row at full row_unit height)."""
+        plan.bind_block(block)
+        RU = plan.row_unit
+        tw = plan.supertile_shape((block, block))[1]
+        W = plan.ncols * tw
+        h = RU if h is None else min(int(h), RU)
+        D, rpd = plan.num_shards, plan.rpd
+        strips = sum(D * s.shape[1] * self._strip(cls, RU, h)[1] * W
+                     * itemsize for _, cls, s, _ in self.rounds)
+        full = 0
+        for delta in range(1, D):
+            m = max(len([g for g in self.ghost_rows[d]
+                         if g // rpd == (d - delta) % D])
+                    for d in range(D))
+            full += D * m * RU * W * itemsize
+        return {"strips": strips, "full_rows": full}
 
 
 class ShardedPlan(GridPlan):
@@ -204,6 +296,8 @@ class ShardedPlan(GridPlan):
         if partition not in PARTITIONS:
             raise ValueError(f"unknown partition {partition!r}; expected "
                              f"one of {PARTITIONS}")
+        #: None, or "interior" / "boundary" on a :meth:`phase_view`
+        self.phase = None
         if partition == "storage-rows" and self.storage != "compact":
             raise ValueError("storage-rows partition requires compact "
                              "storage")
@@ -361,14 +455,87 @@ class ShardedPlan(GridPlan):
         out.setflags(write=False)
         return out
 
+    # -- interior/boundary phase views ---------------------------------------
+
+    def phase_widths(self) -> Tuple[int, int]:
+        """(max interior, max boundary) step counts over the devices --
+        the static grid sizes of the two phase launches."""
+        h = self.halo
+        if h is None or h.int_steps is None:
+            return 0, 0
+        return (max((len(s) for s in h.int_steps), default=0),
+                max((len(s) for s in h.bnd_steps), default=0))
+
+    def phase_tables_host(self):
+        """(interior, boundary) ``(D, 1 + max)`` i32 phase tables --
+        ``[count, step ids...]`` per device, zero-padded (pad steps
+        decode to step 0 and are masked by the count) -- or ``None``
+        when either phase is empty everywhere, i.e. there is nothing
+        to overlap."""
+        mi, mb = self.phase_widths()
+        if mi == 0 or mb == 0:
+            return None
+
+        def tbl(lists, m):
+            out = np.zeros((self.num_shards, 1 + m), np.int32)
+            for d, s in enumerate(lists):
+                out[d, 0] = len(s)
+                out[d, 1:1 + len(s)] = s
+            out.setflags(write=False)
+            return out
+        return (tbl(self.halo.int_steps, mi),
+                tbl(self.halo.bnd_steps, mb))
+
+    def phase_view(self, which: str) -> "ShardedPlan":
+        """A view of this plan whose grid covers only the interior or
+        boundary steps: grid steps are indirected through one extra
+        scalar-prefetch operand (the device's phase-table row, passed
+        last), so the boundary launch -- the only one that reads ghost
+        rows -- can start after the halo exchange while interior steps
+        ran concurrently with it.  Both launches visit each owned step
+        exactly once between them with unchanged operands, so the pair
+        is bit-identical to the single synchronous launch."""
+        if which not in ("interior", "boundary"):
+            raise ValueError(f"unknown phase {which!r}")
+        if self.partition != "storage-rows" or self.halo is None \
+                or self.halo.int_steps is None:
+            raise ValueError("phase views need a storage-rows plan "
+                             "built with halo=True")
+        if self.lowering == "bounding":
+            raise ValueError("phase views reorder the step grid; the "
+                             "bounding lowering is not step-indexed")
+        import copy
+        pv = copy.copy(self)
+        pv.phase = which
+        mi, mb = self.phase_widths()
+        pv.steps_per_shard = mi if which == "interior" else mb
+        return pv
+
+    def _phase_step(self, t, refs):
+        """Raw grid step -> scheduled step id: the phase table (last
+        scalar-prefetch ref) indirects it on a phase view; identity
+        otherwise."""
+        if self.phase is None:
+            return t
+        return refs[-1][1 + t]
+
+    def _phase_count(self, sref, refs):
+        if self.phase is None:
+            return sref[SHARD_COUNT]
+        return refs[-1][0]
+
     # -- GridPlan overrides --------------------------------------------------
 
     @property
     def num_scalar_prefetch(self) -> int:
-        return 2 if self.lowering == "prefetch_lut" else 1
+        base = 2 if self.lowering == "prefetch_lut" else 1
+        return base + (1 if self.phase is not None else 0)
 
     def bound_prefetch(self):
         return None  # per-device tables: the driver passes them
+
+    def _lut_row0(self):
+        return None  # per-device LUT chunks arrive as shard_map operands
 
     @property
     def grid(self):
@@ -410,7 +577,7 @@ class ShardedPlan(GridPlan):
             if self.partition == "rows":
                 by = by + sref[SHARD_ROWLO]
             return batch, bx, by
-        t = grid_ids[nb]
+        t = self._phase_step(grid_ids[nb], prefetch_refs)
         if self.lowering == "prefetch_lut":
             lut_ref = prefetch_refs[1]
             return batch, lut_ref[t, 0], lut_ref[t, 1]
@@ -437,7 +604,7 @@ class ShardedPlan(GridPlan):
         sref = prefetch_refs[0]
         nb = len(self.batch_dims)
         if self.lowering != "bounding":
-            return grid_ids[nb] < sref[SHARD_COUNT]
+            return grid_ids[nb] < self._phase_count(sref, prefetch_refs)
         member = super()._step_valid(grid_ids, bx, by, prefetch_refs)
         owned = self._owned(sref, bx, by)
         return owned if member is None else member & owned
@@ -473,7 +640,7 @@ class ShardedPlan(GridPlan):
             return loc, self._storage_col(bx, by)
         # the sharded enumerations are slab-row-major: the step index
         # addresses the local slab directly
-        t = grid_ids[len(self.batch_dims)]
+        t = self._phase_step(grid_ids[len(self.batch_dims)], refs)
         return t // self.ncols, t % self.ncols
 
     def _storage_col(self, bx, by):
@@ -487,7 +654,7 @@ class ShardedPlan(GridPlan):
         dx, dy = NEIGHBOR_OFFSETS8[j]
         sref = refs[0]
         if self.lowering == "prefetch_lut":
-            t = grid_ids[len(self.batch_dims)]
+            t = self._phase_step(grid_ids[len(self.batch_dims)], refs)
             lut_ref = refs[1]
             nsx = lut_ref[t, _LUT_NBR + 3 * j]
             nsy = lut_ref[t, _LUT_NBR + 3 * j + 1]

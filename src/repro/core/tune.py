@@ -324,14 +324,23 @@ def _coarsen_axis(fractal: str, n: int, block: int,
 
 def ca_candidates(fractal: str, n: int, block: int, *,
                   storages=("embedded", "compact"), max_fuse: int = 8,
-                  max_coarsen: int = 4):
+                  max_coarsen: int = 4, target=None):
+    from . import backend as backend_lib
     from .plan import LOWERINGS
+    target = backend_lib.resolve(target)
+    # pipelining depth is a real axis where the emission can use it:
+    # the TPU structure's DMA double buffers, or a compiled gpu's
+    # Triton scheduler.  The emulated gpu target ignores it for CA.
+    stages_axis = (1, 2) if target.block_indexed \
+        or (target.kind == "gpu" and not target.interpret) else (1,)
     for storage in storages:
         for lowering in LOWERINGS:
             for coarsen in _coarsen_axis(fractal, n, block, max_coarsen):
                 for fuse in _fuse_axis(block, coarsen, max_fuse):
-                    yield {"lowering": lowering, "storage": storage,
-                           "fuse": fuse, "coarsen": coarsen}
+                    for stages in stages_axis:
+                        yield {"lowering": lowering, "storage": storage,
+                               "fuse": fuse, "coarsen": coarsen,
+                               "stages": stages}
 
 
 def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
@@ -374,8 +383,10 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
             return ca_run(a, b, steps, rule=rule, block=block,
                           grid_mode=cfg["lowering"],
                           storage=cfg["storage"], n=n, fuse=cfg["fuse"],
-                          coarsen=cfg["coarsen"], backend=backend,
-                          interpret=interpret, donate=False, mesh=mesh,
+                          coarsen=cfg["coarsen"],
+                          num_stages=cfg.get("stages", 1),
+                          backend=backend, interpret=interpret,
+                          donate=False, mesh=mesh,
                           shard_axis=shard_axis)
         return fn
 
@@ -389,7 +400,8 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
         # warm-start the D>1 search from the single-device winner
         seed = best("ca", base, cache=cache)
     cands = ca_candidates(fractal, n, block, storages=storages,
-                          max_fuse=max_fuse, max_coarsen=max_coarsen)
+                          max_fuse=max_fuse, max_coarsen=max_coarsen,
+                          target=backend)
     return autotune("ca", params, cands, build, cache=cache, force=force,
                     verbose=verbose, seed_config=seed)
 
@@ -457,27 +469,33 @@ GPU_NUM_STAGES = (1, 2, 3)
 
 def flash_candidates(sq: int, sk: int, *, blocks=ALL_FLASH_BLOCKS,
                      target=None):
-    """lowering x block geometry, crossed with num_warps/num_stages
-    when tuning for a *compiled* gpu target (the Triton occupancy and
-    software-pipelining knobs; the interpreter ignores them, so the
-    emulated gpu target keeps the plain axes).  ``target`` accepts a
-    BackendTarget, a name, or None (= the process default -- on a CUDA
-    machine the gpu axes appear without asking)."""
+    """lowering x block geometry, crossed with the gpu-structure
+    pipelining axes when the target has them: on a *compiled* gpu
+    target num_warps x num_stages (Triton occupancy + scheduling); on
+    the emulated gpu target num_stages alone, which is still a real
+    knob there -- it sizes the KV-FIFO software pipeline the flash
+    kernel itself unrolls.  ``target`` accepts a BackendTarget, a
+    name, or None (= the process default -- on a CUDA machine the gpu
+    axes appear without asking)."""
     from . import backend as backend_lib
     from .plan import LOWERINGS
     target = backend_lib.resolve(target)
-    gpu = target.kind == "gpu" and not target.interpret
+    gpu = target.kind == "gpu"
+    compiled = gpu and not target.interpret
     for lowering in LOWERINGS:
         for b in blocks:
             if b <= min(sq, sk) and sq % b == 0 and sk % b == 0:
                 base = {"lowering": lowering, "block_q": b, "block_k": b}
                 if not gpu:
                     yield base
-                    continue
-                for nw in GPU_NUM_WARPS:
-                    for ns in GPU_NUM_STAGES:
-                        yield {**base, "num_warps": nw,
-                               "num_stages": ns}
+                elif compiled:
+                    for nw in GPU_NUM_WARPS:
+                        for ns in GPU_NUM_STAGES:
+                            yield {**base, "num_warps": nw,
+                                   "num_stages": ns}
+                else:
+                    for ns in (1, 2):
+                        yield {**base, "num_stages": ns}
 
 
 def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,

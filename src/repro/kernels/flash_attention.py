@@ -169,6 +169,16 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
     visiting exactly the tiles (in exactly the order) the block-indexed
     structure visits, so results are bit-identical per lowering.
 
+    ``num_stages`` >= 2 software-pipelines the key loop: the loads for
+    key blocks k+1 .. k+stages-1 ride the loop carry as a FIFO, so each
+    iteration issues the load for block k+stages-1 *before* the softmax
+    consumes block k and the tile fetches overlap the dot-products of
+    earlier blocks (on a real GPU the same knob also reaches the Triton
+    scheduler via compiler params).  The FIFO rotation consumes tiles
+    in exactly the synchronous order, so results stay bit-identical;
+    loads past the row extent clamp to the last key block and are
+    discarded unread.
+
     Returns ``call(*tables, q, k, v[, pos])`` where ``tables`` is the
     row-extents operand under ``prefetch_lut`` plus the per-device
     shard-table row when ``sharded`` (global query row = local row +
@@ -179,6 +189,7 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
     n_tbl = 1 if sharded else 0
     rows = rows_local if rows_local is not None else m_q
     kv_blocks = m_k - s0
+    stages = target.resolve_stages(num_stages)
 
     def kern(*refs):
         i = 0
@@ -211,18 +222,24 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
         q = q_ref[0, 0].astype(jnp.float32) * scale
 
         def load_kv(ref, kb):
-            kv = jnp.clip(kb - s0, 0, kv_blocks - 1) if s0 else kb
+            # clamp unconditionally: in-range reads (all the loop ever
+            # consumes) are unchanged, and pipelined prefetches past
+            # the row extent stay in bounds
+            kv = jnp.clip(kb - s0, 0, kv_blocks - 1)
             t = pl.load(ref, (pl.ds(0, 1), pl.ds(0, 1),
                               pl.ds(kv * block_k, block_k),
                               pl.ds(0, d)))
             return t.reshape(block_k, d).astype(jnp.float32)
 
-        def step(j, carry):
-            kb = start + j
+        def load_tiles(kb):
+            return load_kv(k_ref, kb), load_kv(v_ref, kb)
+
+        def update(carry, kb, tiles):
+            k_t, v_t = tiles
             new = _attn_tile_update(
-                q, load_kv(k_ref, kb), load_kv(v_ref, kb), *carry,
-                kind=kind, window=window, qb=qb, kb=kb,
-                block_q=block_q, block_k=block_k, off=off, seq_pos=pos)
+                q, k_t, v_t, *carry, kind=kind, window=window, qb=qb,
+                kb=kb, block_q=block_q, block_k=block_k, off=off,
+                seq_pos=pos)
             if lowering == "bounding" and not getattr(
                     domain, "always_member", False):
                 ok = domain.contains(kb, qb)
@@ -233,7 +250,29 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
         acc0 = (jnp.zeros((block_q, d), jnp.float32),
                 jnp.full((block_q, 1), NEG_INF, jnp.float32),
                 jnp.zeros((block_q, 1), jnp.float32))
-        acc, _, l = jax.lax.fori_loop(0, end - start + 1, step, acc0)
+        n_steps = end - start + 1
+        if stages <= 1:
+            def step(j, carry):
+                kb = start + j
+                return update(carry, kb, load_tiles(kb))
+
+            acc, _, l = jax.lax.fori_loop(0, n_steps, step, acc0)
+        else:
+            # software-pipelined KV FIFO: the prologue issues the loads
+            # for key blocks start .. start+stages-2; each iteration
+            # then loads block j+stages-1 *before* the softmax consumes
+            # block j, keeping stages-1 tile fetches in flight past the
+            # compute.  Consumption order equals the synchronous order.
+            fifo0 = tuple(load_tiles(start + i) for i in range(stages - 1))
+
+            def step(j, carry):
+                fifo, state = carry
+                nxt = load_tiles(start + j + (stages - 1))
+                state = update(state, start + j, fifo[0])
+                return fifo[1:] + (nxt,), state
+
+            _, (acc, _, l) = jax.lax.fori_loop(
+                0, n_steps, step, (fifo0, acc0))
         l = jnp.where(l == 0, 1.0, l)
         o_ref[0, 0, ...] = (acc / l).astype(o_ref.dtype)
 
@@ -473,9 +512,16 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     backend:   emission target ("tpu" | "gpu" | "*-interpret" | None =
                platform default; see :mod:`repro.core.backend`).  The
                gpu structure runs one program per query-block row with
-               an in-kernel loop over its key extent; ``num_warps`` /
-               ``num_stages`` ("auto" = tuned) reach the Triton
-               compiler on real GPUs.
+               an in-kernel loop over its key extent; ``num_stages``
+               >= 2 ("auto" = tuned) software-pipelines that loop (a
+               KV-tile FIFO in the loop carry prefetches key block
+               k+stages-1 while the softmax consumes block k;
+               bit-identical to the synchronous loop) and, on a real
+               GPU, also reaches the Triton scheduler together with
+               ``num_warps``.  The TPU structure accepts the knob but
+               keeps it at the grid level: Mosaic already
+               double-buffers BlockSpec operand copies across the
+               sequential grid.
     causal requires Sq == Sk; local accepts Sq < Sk with the decode
     convention (queries are the last Sq positions) when
     Sk - Sq >= window (full window per query block).

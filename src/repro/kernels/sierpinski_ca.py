@@ -67,15 +67,16 @@ TRACE_COUNTER = {"kernel": 0, "build": 0}
 def auto_schedule(*, fractal: str = "sierpinski-gasket", n: int,
                   block: int, rule: str = "parity",
                   grid_mode: str = "auto", fuse: int | str = "auto",
-                  coarsen: int | str = "auto", mesh=None,
+                  coarsen: int | str = "auto",
+                  num_stages: int | str = "auto", mesh=None,
                   shard_axis: str = "data", target=None):
-    """Resolve the (grid_mode, fuse, coarsen) schedule for a CA problem
-    from the tune cache -- the exact lookup :func:`ca_run` /
-    :func:`ca_step` perform, exposed so drivers can report the schedule
-    they are about to run without re-deriving the cache key.  A sharded
-    run (``mesh=``) consults the shard-count-qualified key; a
-    non-default emission ``target`` consults the target-qualified
-    key."""
+    """Resolve the (grid_mode, fuse, coarsen, num_stages) schedule for
+    a CA problem from the tune cache -- the exact lookup
+    :func:`ca_run` / :func:`ca_step` perform, exposed so drivers can
+    report the schedule they are about to run without re-deriving the
+    cache key.  A sharded run (``mesh=``) consults the
+    shard-count-qualified key; a non-default emission ``target``
+    consults the target-qualified key."""
     from repro.core import tune
     return resolve_auto_schedule(
         "ca",
@@ -87,7 +88,8 @@ def auto_schedule(*, fractal: str = "sierpinski-gasket", n: int,
             target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
         fuse=(fuse, "fuse", 1),
-        coarsen=(coarsen, "coarsen", 1))
+        coarsen=(coarsen, "coarsen", 1),
+        num_stages=(num_stages, "stages", 1))
 
 
 def effective_fuse(fuse: int, steps: int, block: int,
@@ -227,6 +229,42 @@ def _ca_fused_kernel(coords, c_ref, n_ref, s_ref, w_ref, e_ref, nw_ref,
     coords.when_valid(body)
 
 
+def _ca_fused_kernel_dma(coords, c_ref, buf_ref, steps_ref, o_ref,
+                         bufs_ref, sems, *, rule, alpha, block, n, plan,
+                         halo, stages):
+    """Async-copy pipelined fused CA (TPU structure, ``num_stages`` >=
+    2): the state is parked whole in ``pltpu.ANY`` and the kernel
+    streams each step's 9 supertiles (center + 8 lambda^-1-resolved
+    neighbours) into rotating VMEM buffers with explicit DMA -- the
+    copies for grid step t+stages-1 start before step t's trapezoid
+    runs, hiding the tile fetches behind compute.  Tile addressing,
+    visit order and the trapezoid math are exactly the synchronous
+    kernel's, so results are bit-identical."""
+    TRACE_COUNTER["kernel"] += 1
+    refs = coords.refs
+    total = plan.steps_per_launch
+    lin = plan.linear_step(coords.grid_ids)
+
+    def srcs_for(step):
+        gi = plan.grid_ids_at(step)
+        srcs = [plan.storage_index(gi, refs)]
+        for j in range(8):
+            srcs.append(plan.neighbor_index(j, gi, refs))
+        return srcs
+
+    tiles = backend_lib.stream_tiles(
+        c_ref, bufs_ref, sems, srcs_for=srcs_for, lin=lin, total=total,
+        stages=stages)
+
+    def body():
+        o_ref[...] = _trapezoid_update(
+            tiles, coords.bx, coords.by, steps_ref[0], rule=rule,
+            alpha=alpha, block=block, n=n, plan=plan,
+            halo=halo).astype(o_ref.dtype)
+
+    coords.when_valid(body)
+
+
 def _ca_fused_kernel_gpu(coords, c_ref, buf_ref, steps_ref, o_ref, *,
                          rule, alpha, block, n, plan, halo):
     """gpu-structured fused CA: the state arrives whole; the kernel
@@ -257,17 +295,44 @@ def _ca_fused_kernel_gpu(coords, c_ref, buf_ref, steps_ref, o_ref, *,
 
 
 def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
-                  in_shape=None):
+                  in_shape=None, stages=1):
     """One fused pallas_call: (state, stale, steps[1]) -> new state.
 
     Block-indexed targets receive nine BlockSpec views of the state;
+    with ``stages >= 2`` on an async-copy target the state instead
+    arrives whole (``pltpu.ANY``) and the kernel streams the nine tiles
+    through rotating VMEM DMA buffers (:func:`_ca_fused_kernel_dma`).
     gpu targets receive it whole (``in_shape``, which may be the
     halo-extended local array under sharding) plus the stale buffer and
-    the step count as a regular scalar operand."""
+    the step count as a regular scalar operand; their per-step tile
+    gather is already load-then-compute, so ``stages`` only feeds the
+    Triton scheduler on real GPUs."""
     TRACE_COUNTER["build"] += 1
+    target = plan.target
+    stages = target.resolve_stages(stages)
     kernel_kw = dict(rule=rule, alpha=alpha, block=block, n=n, plan=plan,
                      halo=halo)
-    if plan.target.block_indexed:
+    if target.block_indexed and stages > 1:
+        tile = plan.storage_spec((block, block))
+        th, tw = plan.supertile_shape((block, block))
+        call = plan.pallas_call(
+            functools.partial(_ca_fused_kernel_dma, **kernel_kw,
+                              stages=stages),
+            in_specs=[target.any_spec(), tile, target.scalar_spec()],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            scratch_shapes=[
+                target.scratch((stages, 9, th, tw), dtype),
+                target.dma_sems((stages, 9)),
+            ],
+            input_output_aliases={1: 0},
+        )
+
+        def launch(a, b, steps_scalar, prefetch=()):
+            return call(*prefetch, a, b, steps_scalar)
+        return launch
+
+    if target.block_indexed:
         tile = plan.storage_spec((block, block))
         in_specs = [tile]
         in_specs += [plan.neighbor_spec((block, block), j)
@@ -294,6 +359,7 @@ def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
         out_specs=full_spec(shape),
         out_shape=jax.ShapeDtypeStruct(shape, dtype),
         input_output_aliases={1: 0},
+        num_stages=stages if stages > 1 else None,
     )
 
     def launch(a, b, steps_scalar, prefetch=()):
@@ -303,7 +369,7 @@ def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
 
 def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
                  grid_mode, fractal, storage, n, domain, coarsen,
-                 backend):
+                 backend, stages=1):
     domain, n, block, storage = resolve_storage_args(
         state, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
@@ -314,7 +380,7 @@ def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
         return state
     launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
                            n=n, halo=fuse, shape=state.shape,
-                           dtype=state.dtype)
+                           dtype=state.dtype, stages=stages)
 
     def body(carry, per_launch):
         a, b = carry
@@ -327,7 +393,8 @@ def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
 
 
 _CA_STATIC = ("steps", "fuse", "rule", "alpha", "block", "grid_mode",
-              "fractal", "storage", "n", "domain", "coarsen", "backend")
+              "fractal", "storage", "n", "domain", "coarsen", "backend",
+              "stages")
 _CA_RUN_JIT = {
     False: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC),
     True: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC,
@@ -337,7 +404,7 @@ _CA_RUN_JIT = {
 
 def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
                          block, grid_mode, fractal, storage, n, domain,
-                         coarsen, backend, mesh, shard_axis):
+                         coarsen, backend, mesh, shard_axis, stages=1):
     """ca_run across a mesh axis: each device advances its share of the
     domain; compact storage is slab-sharded with a ppermute ghost-row
     exchange before every launch, embedded storage is replicated and
@@ -368,7 +435,8 @@ def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
         in_shape = local_shape
     launch = _build_launch(plan, rule=rule, alpha=alpha, block=block,
                            n=n, halo=fuse, shape=local_shape,
-                           dtype=state.dtype, in_shape=in_shape)
+                           dtype=state.dtype, in_shape=in_shape,
+                           stages=stages)
     tbl, luts = device_tables(plan)
     sched_arr = jnp.asarray(sched, jnp.int32)
     axis = shard_axis
@@ -382,13 +450,58 @@ def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
         sr_specs = tuple((P(axis, None), P(axis, None)) for _ in sr)
         a = plan.pad_rows(state, block)
         b = plan.pad_rows(stale_buf, block)
+        # halo/compute overlap: with pipelining on and a step-indexed
+        # lowering, split each launch into an interior phase (no ghost
+        # reads -- runs while the ppermute is in flight) and a boundary
+        # phase that waits for the exchanged ghost rows.  Falls back to
+        # the synchronous single launch when a phase is empty.
+        phases = plan.phase_tables_host() \
+            if stages > 1 and plan.lowering != "bounding" else None
+        if phases is not None:
+            int_h, bnd_h = phases
+            launch_int = _build_launch(
+                plan.phase_view("interior"), rule=rule, alpha=alpha,
+                block=block, n=n, halo=fuse, shape=local_shape,
+                dtype=state.dtype, in_shape=in_shape, stages=stages)
+            launch_bnd = _build_launch(
+                plan.phase_view("boundary"), rule=rule, alpha=alpha,
+                block=block, n=n, halo=fuse, shape=local_shape,
+                dtype=state.dtype, in_shape=in_shape, stages=stages)
+            itb, btb = jnp.asarray(int_h), jnp.asarray(bnd_h)
+
+            def device_fn(tbl, luts, itb, btb, sr, a, b):
+                pre = (tbl.reshape(-1),) + luts
+                pi = pre + (itb.reshape(-1),)
+                pb = pre + (btb.reshape(-1),)
+
+                def body(carry, per_launch):
+                    x, y = carry
+                    s = jnp.reshape(per_launch, (1,))
+                    ghost = halo.exchange(plan, x, sr, h=fuse)
+                    ext0 = halo.cat(plan, x, jnp.zeros_like(ghost))
+                    mid = launch_int(ext0, y, s, pi)
+                    new = launch_bnd(halo.cat(plan, x, ghost), mid, s,
+                                     pb)
+                    return (new, x), None
+
+                (xa, _), _ = jax.lax.scan(body, (a, b), sched_arr)
+                return xa
+
+            out = shard_map(
+                device_fn, mesh=mesh,
+                in_specs=(tbl_spec, lut_specs, P(axis, None),
+                          P(axis, None), sr_specs, P(axis, None),
+                          P(axis, None)),
+                out_specs=P(axis, None), check_rep=False)(
+                    tbl, luts, itb, btb, sr, a, b)
+            return plan.unpad_rows(out, block)
 
         def device_fn(tbl, luts, sr, a, b):
             pre = (tbl.reshape(-1),) + luts
 
             def body(carry, per_launch):
                 x, y = carry
-                ext = halo.extend(plan, x, sr)
+                ext = halo.extend(plan, x, sr, h=fuse)
                 new = launch(ext, y, jnp.reshape(per_launch, (1,)), pre)
                 return (new, x), None
 
@@ -438,9 +551,9 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
            fractal: str = "sierpinski-gasket",
            storage: str = "embedded", n: int | None = None,
            domain: BlockDomain | None = None, coarsen: int | str = 1,
-           backend=None, interpret: bool | None = None,
-           donate: bool | None = None, mesh=None,
-           shard_axis: str = "data") -> jnp.ndarray:
+           num_stages: int | str = "auto", backend=None,
+           interpret: bool | None = None, donate: bool | None = None,
+           mesh=None, shard_axis: str = "data") -> jnp.ndarray:
     """Advance the CA ``steps`` steps and return the final state.
 
     ``fuse=k`` executes k steps per kernel launch (one in-kernel
@@ -465,20 +578,30 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
     replicated and devices psum their disjoint block shares.  Both are
     bit-identical to the single-device run.
 
+    ``num_stages`` >= 2 ("auto" = tuned) software-pipelines each
+    launch on capable targets (see README "Pipelining"): the TPU
+    structure streams the 9 halo supertiles through rotating
+    async-copy VMEM buffers so step t+1's fetches overlap step t's
+    trapezoid; under a sharded compact run the scan also splits each
+    launch into interior and boundary phases so the ppermute ghost
+    exchange overlaps interior compute.  Bit-identical to the
+    synchronous path.
+
     ``backend`` selects the emission target ("tpu" | "gpu" |
     "*-interpret" | None = platform default; see
     :mod:`repro.core.backend`)."""
     target = backend_lib.resolve(backend, interpret)
-    grid_mode, fuse, coarsen = auto_schedule(
+    grid_mode, fuse, coarsen, num_stages = auto_schedule(
         fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
-        grid_mode=grid_mode, fuse=fuse, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis, target=target)
+        grid_mode=grid_mode, fuse=fuse, coarsen=coarsen,
+        num_stages=num_stages, mesh=mesh, shard_axis=shard_axis,
+        target=target)
     if donate is None:
         donate = not target.interpret and jax.default_backend() != "cpu"
     kw = dict(steps=int(steps), fuse=fuse, rule=rule, alpha=alpha,
               block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target)
+              backend=target, stages=target.resolve_stages(num_stages))
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[bool(donate)](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)
@@ -491,7 +614,8 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             fractal: str = "sierpinski-gasket",
             storage: str = "embedded", n: int | None = None,
             domain: BlockDomain | None = None, coarsen: int | str = 1,
-            backend=None, interpret: bool | None = None, mesh=None,
+            num_stages: int | str = "auto", backend=None,
+            interpret: bool | None = None, mesh=None,
             shard_axis: str = "data") -> jnp.ndarray:
     """One CA step (the ``steps=1`` slice of :func:`ca_run`).
 
@@ -499,13 +623,15 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
     two steps ago, or zeros); it is aliased to the output buffer so
     blocks a compact grid never visits remain valid."""
     target = backend_lib.resolve(backend, interpret)
-    grid_mode, _, coarsen = auto_schedule(
+    grid_mode, _, coarsen, num_stages = auto_schedule(
         fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
-        grid_mode=grid_mode, fuse=1, coarsen=coarsen, mesh=mesh,
-        shard_axis=shard_axis, target=target)
+        grid_mode=grid_mode, fuse=1, coarsen=coarsen,
+        num_stages=num_stages, mesh=mesh, shard_axis=shard_axis,
+        target=target)
     kw = dict(steps=1, fuse=1, rule=rule, alpha=alpha, block=block,
               grid_mode=grid_mode, fractal=fractal, storage=storage,
-              n=n, domain=domain, coarsen=coarsen, backend=target)
+              n=n, domain=domain, coarsen=coarsen, backend=target,
+              stages=target.resolve_stages(num_stages))
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[False](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)

@@ -177,6 +177,41 @@ def _write_kernel(coords, m_ref, o_ref, *, value, block, n, plan):
     coords.when_valid(body)
 
 
+def _stream_storage_tile(coords, m_ref, bufs_ref, sems, plan, stages):
+    """This grid step's storage supertile, streamed out of the
+    ``pltpu.ANY``-resident state through the rotating async-copy
+    buffers (the copy for step t+stages-1 starts before this step's
+    compute; see :func:`repro.core.backend.stream_tiles`)."""
+    lin = plan.linear_step(coords.grid_ids)
+
+    def srcs_for(step):
+        return [plan.storage_index(plan.grid_ids_at(step), coords.refs)]
+
+    return backend_lib.stream_tiles(
+        m_ref, bufs_ref, sems, srcs_for=srcs_for, lin=lin,
+        total=plan.steps_per_launch, stages=stages)[0]
+
+
+def _write_kernel_dma(coords, m_ref, alias_ref, o_ref, bufs_ref, sems,
+                      *, value, block, n, plan, stages):
+    """Async-copy pipelined write (TPU structure, ``num_stages`` >= 2):
+    the state is parked in ``pltpu.ANY`` and each step's input tile
+    streams through rotating VMEM DMA buffers while the next step's
+    copy is in flight.  ``alias_ref`` is the same state routed as a
+    BlockSpec operand purely to alias the unwritten remainder to the
+    output; the kernel never reads it."""
+    del alias_ref
+    tile = _stream_storage_tile(coords, m_ref, bufs_ref, sems, plan,
+                                stages)
+
+    def body():
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
+        o_ref[...] = jnp.where(mask, jnp.asarray(value, o_ref.dtype),
+                               tile.astype(o_ref.dtype))
+
+    coords.when_valid(body)
+
+
 def _write_kernel_gpu(coords, m_ref, o_ref, *, value, block, n, plan):
     """gpu-structured write: the state arrives whole; the kernel
     resolves its supertile offset itself (the plan's storage index,
@@ -195,12 +230,36 @@ def _write_kernel_gpu(coords, m_ref, o_ref, *, value, block, n, plan):
     coords.when_valid(body)
 
 
-def _emit_write(plan: GridPlan, shape, dtype, *, value, block, n):
+def _emit_write(plan: GridPlan, shape, dtype, *, value, block, n,
+                stages=1):
     """The write pallas_call for either emission structure: BlockSpec
     tiles on block-indexed (TPU) targets, whole-array refs + in-kernel
     addressing on GPU targets.  The unwritten remainder keeps the input
-    through the output alias either way."""
-    if plan.target.block_indexed:
+    through the output alias either way.  ``stages >= 2`` on an
+    async-copy target streams the input tiles through rotating DMA
+    buffers instead (:func:`_write_kernel_dma`); on the GPU structure
+    it only feeds the Triton scheduler."""
+    target = plan.target
+    stages = target.resolve_stages(stages)
+    if target.block_indexed and stages > 1:
+        spec = plan.storage_spec((block, block))
+        th, tw = plan.supertile_shape((block, block))
+        call = plan.pallas_call(
+            functools.partial(_write_kernel_dma, value=value,
+                              block=block, n=n, plan=plan,
+                              stages=stages),
+            in_specs=[target.any_spec(), spec],
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct(shape, dtype),
+            scratch_shapes=[
+                target.scratch((stages, 1, th, tw), dtype),
+                target.dma_sems((stages, 1)),
+            ],
+            input_output_aliases={1: 0},
+        )
+        # the state rides twice: ANY (DMA source) + BlockSpec (alias)
+        return lambda *args: call(*args[:-1], args[-1], args[-1])
+    if target.block_indexed:
         spec = plan.storage_spec((block, block))
         return plan.pallas_call(
             functools.partial(_write_kernel, value=value, block=block,
@@ -217,21 +276,22 @@ def _emit_write(plan: GridPlan, shape, dtype, *, value, block, n):
         out_specs=full_spec(shape),
         out_shape=jax.ShapeDtypeStruct(shape, dtype),
         input_output_aliases={0: 0},
+        num_stages=stages if stages > 1 else None,
     )
 
 
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
-                                    "coarsen", "backend"))
+                                    "coarsen", "backend", "stages"))
 def _write_impl(m, value, *, block, grid_mode, fractal, storage, n,
-                domain, coarsen, backend):
+                domain, coarsen, backend, stages=1):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
                     backend=backend)
     call = _emit_write(plan, m.shape, m.dtype, value=value, block=block,
-                       n=n)
+                       n=n, stages=stages)
     return call(m)
 
 
@@ -254,9 +314,10 @@ def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
                                     "coarsen", "backend", "mesh",
-                                    "shard_axis"))
+                                    "shard_axis", "stages"))
 def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
-                        n, domain, coarsen, backend, mesh, shard_axis):
+                        n, domain, coarsen, backend, mesh, shard_axis,
+                        stages=1):
     """Sharded write: each device writes its share of the domain.
     Compact storage writes its orthotope row slab in place; embedded
     storage combines the replicated per-device results with a disjoint
@@ -270,7 +331,7 @@ def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
         shard_axis=shard_axis, backend=backend)
     call = _emit_write(plan, plan.local_storage_shape(block), m.dtype,
-                       value=value, block=block, n=n)
+                       value=value, block=block, n=n, stages=stages)
     axis = shard_axis
     lut_specs = tuple(P(axis, None) for _ in luts)
     if storage == "compact":
@@ -301,7 +362,8 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      fractal: str = "sierpinski-gasket",
                      storage: str = "embedded", n: int | None = None,
                      domain: BlockDomain | None = None,
-                     coarsen: int | str = 1, backend=None,
+                     coarsen: int | str = 1,
+                     num_stages: int | str = "auto", backend=None,
                      interpret: bool | None = None, mesh=None,
                      shard_axis: str = "data") -> jnp.ndarray:
     """Write ``value`` to every fractal cell of the (n, n) state.
@@ -312,12 +374,15 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
     packed orthotope array, pass n= or domain=); coarsen: superblock
     side in fine blocks (or "auto"); backend: emission target
     ("tpu" | "gpu" | "*-interpret" | None = platform default, see
-    :mod:`repro.core.backend`); mesh/shard_axis: shard the write across
+    :mod:`repro.core.backend`); num_stages: software-pipeline depth
+    (">= 2" streams input tiles through async-copy DMA buffers on
+    capable targets, "auto" = tuned; bit-identical either way);
+    mesh/shard_axis: shard the write across
     a mesh axis (embarrassing: disjoint block ownership, psum combine
     under embedded storage)."""
     target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
-    grid_mode, coarsen = resolve_auto_schedule(
+    grid_mode, coarsen, num_stages = resolve_auto_schedule(
         "write",
         tune.target_params(
             tune.shard_params(
@@ -326,10 +391,11 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                 mesh, shard_axis),
             target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
-        coarsen=(coarsen, "coarsen", 1))
+        coarsen=(coarsen, "coarsen", 1),
+        num_stages=(num_stages, "stages", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target)
+              backend=target, stages=target.resolve_stages(num_stages))
     if mesh is not None:
         return _write_sharded_impl(m, value, mesh=mesh,
                                    shard_axis=shard_axis, **kw)
@@ -345,6 +411,27 @@ def _sum_kernel(coords, m_ref, o_ref, *, block, n, plan):
         mask = _tile_mask(plan, coords.bx, coords.by, block, n)
         tile = jnp.where(mask, m_ref[...], 0).astype(jnp.float32)
         o_ref[0, 0] += jnp.sum(tile)
+
+    coords.when_valid(body)
+
+
+def _sum_kernel_dma(coords, m_ref, o_ref, bufs_ref, sems, *, block, n,
+                    plan, stages):
+    """Async-copy pipelined sum: the sequential accumulate of
+    :func:`_sum_kernel` with the input tile streamed through rotating
+    DMA buffers, so the next tile's copy flies during this tile's
+    reduction.  Same grid, same accumulation order: bit-identical."""
+    tile = _stream_storage_tile(coords, m_ref, bufs_ref, sems, plan,
+                                stages)
+
+    @pl.when(coords.first_step)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body():
+        mask = _tile_mask(plan, coords.bx, coords.by, block, n)
+        o_ref[0, 0] += jnp.sum(
+            jnp.where(mask, tile, 0).astype(jnp.float32))
 
     coords.when_valid(body)
 
@@ -369,13 +456,31 @@ def _sum_kernel_gpu(coords, m_ref, o_ref, *, block, n, plan):
     coords.when_valid(body)
 
 
-def _emit_sum(plan: GridPlan, shape, *, block, n):
+def _emit_sum(plan: GridPlan, shape, *, block, n, stages=1,
+              dtype=jnp.float32):
     """The sum pallas_call for either structure.  Returns
     ``(call, finish)`` where ``finish`` maps the raw kernel output to
     the (1, 1) f32 total: identity on sequential-grid targets (the
     kernel accumulated in place), an in-step-order partials reduction
-    on parallel-grid targets."""
-    if plan.target.sequential_grid:
+    on parallel-grid targets.  ``stages >= 2`` streams the input tiles
+    through async-copy DMA buffers on capable targets."""
+    target = plan.target
+    stages = target.resolve_stages(stages)
+    if target.sequential_grid and stages > 1 and target.async_copy:
+        th, tw = plan.supertile_shape((block, block))
+        call = plan.pallas_call(
+            functools.partial(_sum_kernel_dma, block=block, n=n,
+                              plan=plan, stages=stages),
+            in_specs=[target.any_spec()],
+            out_specs=plan.block_spec((1, 1), lambda bx, by: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            scratch_shapes=[
+                target.scratch((stages, 1, th, tw), dtype),
+                target.dma_sems((stages, 1)),
+            ],
+        )
+        return call, lambda out: out
+    if target.sequential_grid:
         call = plan.pallas_call(
             functools.partial(_sum_kernel, block=block, n=n, plan=plan),
             in_specs=[plan.storage_spec((block, block))],
@@ -389,6 +494,7 @@ def _emit_sum(plan: GridPlan, shape, *, block, n):
         in_specs=[full_spec(shape)],
         out_specs=full_spec((steps, 1)),
         out_shape=jax.ShapeDtypeStruct((steps, 1), jnp.float32),
+        num_stages=stages if stages > 1 else None,
     )
 
     def finish(partials):
@@ -402,14 +508,15 @@ def _emit_sum(plan: GridPlan, shape, *, block, n):
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
-                                             "backend"))
+                                             "backend", "stages"))
 def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
-              coarsen, backend):
+              coarsen, backend, stages=1):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
                     backend=backend)
-    call, finish = _emit_sum(plan, m.shape, block=block, n=n)
+    call, finish = _emit_sum(plan, m.shape, block=block, n=n,
+                             stages=stages, dtype=m.dtype)
     return finish(call(m))[0, 0]
 
 
@@ -417,9 +524,10 @@ def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
                                              "backend", "mesh",
-                                             "shard_axis"))
+                                             "shard_axis", "stages"))
 def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
-                      domain, coarsen, backend, mesh, shard_axis):
+                      domain, coarsen, backend, mesh, shard_axis,
+                      stages=1):
     """Sharded sum: each device accumulates its owned blocks, one psum
     reduces across the axis.  The per-device accumulation order differs
     from the single-device grid order, so results agree to float
@@ -432,7 +540,8 @@ def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
         shard_axis=shard_axis, backend=backend)
     local_shape = plan.local_storage_shape(block)
-    call, finish = _emit_sum(plan, local_shape, block=block, n=n)
+    call, finish = _emit_sum(plan, local_shape, block=block, n=n,
+                             stages=stages, dtype=m.dtype)
     axis = shard_axis
     lut_specs = tuple(P(axis, None) for _ in luts)
     state_spec = P(axis, None) if storage == "compact" else P(None, None)
@@ -454,7 +563,8 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                    fractal: str = "sierpinski-gasket",
                    storage: str = "embedded", n: int | None = None,
                    domain: BlockDomain | None = None,
-                   coarsen: int | str = 1, backend=None,
+                   coarsen: int | str = 1,
+                   num_stages: int | str = "auto", backend=None,
                    interpret: bool | None = None, mesh=None,
                    shard_axis: str = "data") -> jnp.ndarray:
     """f32 sum over fractal cells, sequential accumulate over the plan's
@@ -466,7 +576,7 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
     bit-exactly."""
     target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
-    grid_mode, coarsen = resolve_auto_schedule(
+    grid_mode, coarsen, num_stages = resolve_auto_schedule(
         "write",
         tune.target_params(
             tune.shard_params(
@@ -475,10 +585,11 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                 mesh, shard_axis),
             target),
         grid_mode=(grid_mode, "lowering", "closed_form"),
-        coarsen=(coarsen, "coarsen", 1))
+        coarsen=(coarsen, "coarsen", 1),
+        num_stages=(num_stages, "stages", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target)
+              backend=target, stages=target.resolve_stages(num_stages))
     if mesh is not None:
         return _sum_sharded_impl(m, mesh=mesh, shard_axis=shard_axis,
                                  **kw)

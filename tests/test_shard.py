@@ -313,20 +313,27 @@ def test_halo_plan_resolves_every_remote_neighbor():
                     assert m == g - lo
                 else:
                     assert plan.rpd <= m < plan.rpd + halo.h_max
-        # every ghost row is delivered by exactly one ppermute round,
-        # from its owner's matching send slot
+        # every (ghost row, strip class) is delivered by exactly one
+        # ppermute round, from its owner's matching send slot
         delivered = {d: set() for d in range(D)}
-        for delta, send, recv in halo.deltas:
+        for delta, cls, send, recv in halo.rounds:
             for d in range(D):
                 src = (d - delta) % D
                 needs = [g for g in halo.ghost_rows[d]
-                         if g // plan.rpd == src]
+                         if g // plan.rpd == src
+                         and cls in halo.row_class[d][g]]
                 for i, g in enumerate(needs):
                     assert send[src][i] == g - src * plan.rpd
                     assert recv[d][i] == halo.ghost_rows[d].index(g)
-                    delivered[d].add(g)
+                    delivered[d].add((g, cls))
         for d in range(D):
-            assert delivered[d] == set(halo.ghost_rows[d])
+            want = {(g, c) for g in halo.ghost_rows[d]
+                    for c in halo.row_class[d][g]}
+            assert delivered[d] == want
+            # a full-row ship never coexists with a strip ship
+            for g in halo.ghost_rows[d]:
+                s = halo.row_class[d][g]
+                assert s == {"full"} or "full" not in s
 
 
 def test_sharded_plan_validation():
@@ -417,10 +424,10 @@ def test_tune_keys_qualified_by_shard_count():
               1.0, save=False)
     assert ca.auto_schedule(n=32, block=8)[0] == "bounding"
     assert ca.auto_schedule(n=32, block=8, mesh=mesh2) == \\
-        ("prefetch_lut", 4, 1)
+        ("prefetch_lut", 4, 1, 1)
     mesh4 = jax.make_mesh((4,), ("data",))  # untuned D: defaults
     assert ca.auto_schedule(n=32, block=8, mesh=mesh4) == \\
-        ("closed_form", 1, 1)
+        ("closed_form", 1, 1, 1)
     print("OK")
     """, devices=8)
     assert "OK" in out
