@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fractal as F
-from repro.core.domain import BandDomain, TriangularDomain
+from repro.core.domain import TriangularDomain
 from .common import row, time_fn
 
 

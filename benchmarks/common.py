@@ -36,10 +36,33 @@ def row(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}")
 
 
+def git_revision() -> dict:
+    """``{"commit": <sha>, "dirty": <bool>}`` for the repo this file
+    lives in, or ``{}`` when git (or the repo) is unavailable -- a
+    benchmark artifact is attributable to a source state, not just a
+    machine."""
+    import os
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+            check=True).stdout.strip() != ""
+    except (OSError, subprocess.SubprocessError):
+        return {}
+    return {"commit": sha, "dirty": dirty}
+
+
 def run_metadata() -> dict:
     """Environment stamp for a benchmark artifact, so the perf
-    trajectory stays attributable across machines: jax/jaxlib versions,
-    backend, device count and kinds, host platform and Python."""
+    trajectory stays attributable across machines and source states:
+    jax/jaxlib versions, backend, device count and kinds, host platform
+    and Python, plus the git commit (and dirty flag) the run came
+    from."""
     import platform
 
     import jaxlib
@@ -47,6 +70,7 @@ def run_metadata() -> dict:
     from repro.core import backend as backend_lib
     devs = jax.devices()
     return {
+        **git_revision(),
         "jax": jax.__version__,
         "jaxlib": jaxlib.__version__,
         "backend": jax.default_backend(),

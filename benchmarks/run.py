@@ -6,14 +6,19 @@
 import argparse
 import os
 
+#: every suite ``--only`` accepts.  ``backend`` is opt-in only (the
+#: per-target lambda-vs-bounding A/B rows are also part of map/attn),
+#: hence its absence from the default no-``--only`` sweep below.
+SUITES = ("map", "space", "time", "ca", "sched", "shard", "overlap",
+          "attn", "backend")
 
-def main() -> None:
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: map,space,time,ca,sched,shard,"
-                         "overlap,attn,backend (backend = the "
-                         "per-target lambda-vs-bounding A/B rows alone; "
-                         "they are also part of map/attn)")
+                    help="comma list: " + ",".join(SUITES) + " (backend "
+                         "= the per-target lambda-vs-bounding A/B rows "
+                         "alone; they are also part of map/attn)")
     ap.add_argument("--json", default=None,
                     help="artifact path (default: BENCH_<tag>.json at "
                          "the repo root)")
@@ -21,8 +26,13 @@ def main() -> None:
                     help="skip the JSON artifact")
     ap.add_argument("--tag", default=None,
                     help="artifact tag (default: jax backend)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only is not None:
+        unknown = sorted(only - set(SUITES))
+        if unknown:
+            ap.error(f"unknown suite(s) {', '.join(unknown)}; "
+                     f"available: {', '.join(SUITES)}")
 
     import jax
 

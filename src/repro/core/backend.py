@@ -344,6 +344,41 @@ def full_spec(shape) -> pl.BlockSpec:
 
 
 # ---------------------------------------------------------------------------
+# emission observer (the access sanitizer's hook)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EmitRecord:
+    """What one :func:`emit` call is about to lower -- handed to the
+    installed emit hook so it can instrument the launch (the analysis
+    sanitizer wraps index maps and the kernel body) and observe calls.
+    ``aliases`` is the array-operand-keyed mapping, before the table
+    shift."""
+
+    plan: object
+    in_specs: tuple
+    out_specs: object
+    out_shape: object
+    aliases: dict
+    nsp: int
+    interpret: bool
+
+
+_EMIT_HOOK = None
+
+
+def set_emit_hook(hook):
+    """Install an emission observer; returns the previous hook.  The
+    hook sees every *interpreted* launch: ``instrument(record, kernel,
+    in_specs, out_specs)`` may return replacements, and ``wrap_call``
+    wraps the emitted callable.  ``None`` uninstalls."""
+    global _EMIT_HOOK
+    prev = _EMIT_HOOK
+    _EMIT_HOOK = hook
+    return prev
+
+
+# ---------------------------------------------------------------------------
 # the emitter: every plan-driven pallas_call in the repo goes through
 # here, and this is the only module that constructs a grid spec.
 # ---------------------------------------------------------------------------
@@ -388,6 +423,22 @@ def emit(plan, kernel: Callable, *, in_specs, out_specs, out_shape,
     extra = dict(kwargs)
     extra.update(target.call_kwargs(num_warps, num_stages))
 
+    record = None
+    if _EMIT_HOOK is not None and interp:
+        record = EmitRecord(plan=plan, in_specs=tuple(in_specs),
+                            out_specs=out_specs, out_shape=out_shape,
+                            aliases=dict(aliases), nsp=nsp,
+                            interpret=interp)
+        kernel, in_specs, out_specs = _EMIT_HOOK.instrument(
+            record, kernel, in_specs, out_specs)
+        hook = _EMIT_HOOK
+
+        def _wrap(fn):
+            return hook.wrap_call(record, fn)
+    else:
+        def _wrap(fn):
+            return fn
+
     if nsp == 0:
         def wrapped(*refs):
             kernel(plan.kernel_coords(), *refs)
@@ -397,7 +448,7 @@ def emit(plan, kernel: Callable, *, in_specs, out_specs, out_shape,
             out_specs=out_specs, out_shape=out_shape,
             scratch_shapes=list(scratch_shapes),
             input_output_aliases=aliases, interpret=interp, **extra)
-        return lambda *operands: call(*operands)
+        return _wrap(lambda *operands: call(*operands))
 
     def wrapped(*args):
         kernel(plan.kernel_coords(*args[:nsp]), *args[nsp:])
@@ -432,5 +483,5 @@ def emit(plan, kernel: Callable, *, in_specs, out_specs, out_shape,
 
     bound = plan.bound_prefetch()
     if bound is None:
-        return lambda *operands: call(*operands)
-    return lambda *operands: call(*bound, *operands)
+        return _wrap(lambda *operands: call(*operands))
+    return _wrap(lambda *operands: call(*bound, *operands))

@@ -17,7 +17,6 @@ scalar-prefetch lookup-table variant (the TPU analogue of the paper's
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax.numpy as jnp

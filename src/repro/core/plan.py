@@ -63,7 +63,6 @@ from __future__ import annotations
 
 from typing import Callable, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl

@@ -215,13 +215,21 @@ def autotune(kernel: str, params: dict, candidates: Iterable[dict],
              build: Callable[[dict], Callable], *,
              cache: Optional[TuneCache] = None, force: bool = False,
              warmup: int = MEASURE_WARMUP, iters: int = MEASURE_ITERS,
-             verbose: bool = False, seed_config: Optional[dict] = None):
+             verbose: bool = False, seed_config: Optional[dict] = None,
+             verify: Optional[Callable[[dict], None]] = None):
     """Generic search: measure every viable candidate, persist the winner.
 
     ``build(config)`` returns a zero-arg measurable callable, or raises
     ValueError / NotImplementedError to declare the candidate inviable
     for this problem (e.g. fuse > supertile, coarsen on a non-fractal
     domain) -- inviable candidates are skipped, not errors.
+
+    ``verify(config)``, when given, runs after ``build`` and before any
+    measurement; raising ValueError (the plan verifier's
+    ``PlanVerificationError`` is one) rejects the candidate so a plan
+    that fails static analysis is never timed, let alone persisted as a
+    winner.  The kernel-specific searchers wire this to
+    :mod:`repro.analysis` via their ``verify=True`` flag.
 
     ``seed_config`` warm-starts the search from a related problem's
     winner (e.g. the D=1 cache entry seeding a D>1 search): only the
@@ -256,6 +264,13 @@ def autotune(kernel: str, params: dict, candidates: Iterable[dict],
             if verbose:
                 print(f"  skip {cfg}: {e}")
             continue
+        if verify is not None:
+            try:
+                verify(cfg)
+            except (ValueError, NotImplementedError) as e:
+                if verbose:
+                    print(f"  reject {cfg}: plan verification failed: {e}")
+                continue
         us = measure(fn, warmup=warmup, iters=iters)
         trials.append((dict(cfg), us))
         if verbose:
@@ -349,7 +364,7 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
                 max_coarsen: int = 4, cache: Optional[TuneCache] = None,
                 force: bool = False, interpret: Optional[bool] = None,
                 verbose: bool = False, backend=None, mesh=None,
-                shard_axis: str = "data"):
+                shard_axis: str = "data", verify: bool = False):
     """Search the CA scheduling axes for (fractal, n, block, rule).
 
     ``mesh=`` tunes the *sharded* run (shard-count-qualified cache
@@ -357,7 +372,10 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
     D=1 config and its one-knob neighbours are re-measured instead of
     the full cross product (the fuse/coarsen landscape moves little
     with D; the lowering sometimes flips).  ``backend=`` tunes a
-    non-default emission target under its own qualified key."""
+    non-default emission target under its own qualified key.
+    ``verify=True`` statically verifies each candidate's GridPlan
+    (:mod:`repro.analysis`) before it is measured; failing candidates
+    are rejected from the search."""
     from .compact import compact_layout
     from .domain import make_fractal_domain
     from repro.kernels.sierpinski_ca import ca_run
@@ -390,6 +408,19 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
                           shard_axis=shard_axis)
         return fn
 
+    vfy = None
+    if verify:
+        def vfy(cfg):
+            a, b = operands[cfg["storage"]]
+            # steps == fuse: a single fused launch traces (and thereby
+            # verifies) the exact plan the measured config runs.
+            ca_run(a, b, cfg["fuse"], rule=rule, block=block,
+                   grid_mode=cfg["lowering"], storage=cfg["storage"],
+                   n=n, fuse=cfg["fuse"], coarsen=cfg["coarsen"],
+                   num_stages=cfg.get("stages", 1), backend=backend,
+                   interpret=interpret, donate=False, mesh=mesh,
+                   shard_axis=shard_axis, verify=True)
+
     base = _axis_param(
         {"fractal": fractal, "n": n, "block": block, "rule": rule},
         "storages", storages, ALL_STORAGES)
@@ -403,7 +434,7 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
                           max_fuse=max_fuse, max_coarsen=max_coarsen,
                           target=backend)
     return autotune("ca", params, cands, build, cache=cache, force=force,
-                    verbose=verbose, seed_config=seed)
+                    verbose=verbose, seed_config=seed, verify=vfy)
 
 
 def write_candidates(fractal: str, n: int, block: int, *,
@@ -423,10 +454,10 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
                    cache: Optional[TuneCache] = None, force: bool = False,
                    interpret: Optional[bool] = None,
                    verbose: bool = False, backend=None, mesh=None,
-                   shard_axis: str = "data"):
+                   shard_axis: str = "data", verify: bool = False):
     """Search lowering x storage x coarsen for the write microbenchmark
-    (``mesh``/``backend`` as in :func:`autotune_ca`, incl. the D=1
-    warm start)."""
+    (``mesh``/``backend``/``verify`` as in :func:`autotune_ca`, incl.
+    the D=1 warm start)."""
     from .compact import compact_layout
     from .domain import make_fractal_domain
     from repro.kernels.sierpinski_write import sierpinski_write
@@ -450,6 +481,16 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
                                     mesh=mesh, shard_axis=shard_axis)
         return fn
 
+    vfy = None
+    if verify:
+        def vfy(cfg):
+            sierpinski_write(operands[cfg["storage"]], 1.0, block=block,
+                             grid_mode=cfg["lowering"],
+                             storage=cfg["storage"], n=n,
+                             coarsen=cfg["coarsen"], backend=backend,
+                             interpret=interpret, mesh=mesh,
+                             shard_axis=shard_axis, verify=True)
+
     base = _axis_param({"fractal": fractal, "n": n, "block": block},
                        "storages", storages, ALL_STORAGES)
     base = target_params(base, backend)
@@ -458,7 +499,8 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
     cands = write_candidates(fractal, n, block, storages=storages,
                              max_coarsen=max_coarsen)
     return autotune("write", params, cands, build, cache=cache,
-                    force=force, verbose=verbose, seed_config=seed)
+                    force=force, verbose=verbose, seed_config=seed,
+                    verify=vfy)
 
 
 #: Triton compiler axes the gpu targets additionally search (the
@@ -503,9 +545,12 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
                    sk: Optional[int] = None, d: int = 64, window: int = 0,
                    blocks=(64, 128, 256), cache: Optional[TuneCache] = None,
                    force: bool = False, interpret: Optional[bool] = None,
-                   verbose: bool = False, backend=None):
+                   verbose: bool = False, backend=None,
+                   verify: bool = False):
     """Search lowering x block geometry (x num_warps/num_stages on a
-    compiled gpu target) for the flash-attention kernel."""
+    compiled gpu target) for the flash-attention kernel.
+    ``verify=True`` statically verifies each candidate's plan before
+    measuring it (:mod:`repro.analysis`)."""
     from repro.kernels.flash_attention import flash_attention
     import jax.numpy as jnp
 
@@ -527,6 +572,18 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
                                    backend=backend, interpret=interpret)
         return fn
 
+    vfy = None
+    if verify:
+        def vfy(cfg):
+            flash_attention(q, k, v, kind=kind, window=window,
+                            block_q=cfg["block_q"],
+                            block_k=cfg["block_k"],
+                            grid_mode=cfg["lowering"],
+                            num_warps=cfg.get("num_warps"),
+                            num_stages=cfg.get("num_stages"),
+                            backend=backend, interpret=interpret,
+                            verify=True)
+
     params = target_params(_axis_param(
         {"kind": kind, "batch": batch, "heads": heads,
          "kv_heads": kv_heads, "sq": sq, "sk": sk, "d": d,
@@ -535,7 +592,8 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
     return autotune("flash", params,
                     flash_candidates(sq, sk, blocks=blocks,
                                      target=backend),
-                    build, cache=cache, force=force, verbose=verbose)
+                    build, cache=cache, force=force, verbose=verbose,
+                    verify=vfy)
 
 
 # ---------------------------------------------------------------------------

@@ -315,11 +315,11 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
     "storage", "kv_seq_len", "backend", "num_warps", "num_stages",
-    "mesh", "shard_axis"))
+    "mesh", "shard_axis", "verify"))
 def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
                 block_k, grid_mode, storage, kv_seq_len, backend,
                 num_warps=None, num_stages=None, mesh=None,
-                shard_axis="data"):
+                shard_axis="data", verify=False):
     b, h, sq, d = q.shape
     _, hkv, sk_arr, _ = k.shape
     group = h // hkv
@@ -382,6 +382,9 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
         plan = GridPlan(domain, grid_mode, batch_dims=(b * h,),
                         backend=target)
         out_shape = q.shape
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="flash")
 
     # compact KV: k/v hold only the key blocks in [s0, m_k)
     s0 = key_block_support(domain)[0] if storage == "compact" else 0
@@ -485,7 +488,7 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     backend=None, num_warps: int | str | None = None,
                     num_stages: int | str | None = None,
                     interpret: bool | None = None, mesh=None,
-                    shard_axis: str = "data"):
+                    shard_axis: str = "data", verify: bool = False):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
 
     kind:      "causal" | "local" (window tokens) | "full"
@@ -559,4 +562,4 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                        grid_mode=grid_mode, storage=storage,
                        kv_seq_len=kv_seq_len, backend=target,
                        num_warps=num_warps, num_stages=num_stages,
-                       mesh=mesh, shard_axis=shard_axis)
+                       mesh=mesh, shard_axis=shard_axis, verify=verify)

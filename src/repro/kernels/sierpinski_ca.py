@@ -369,11 +369,14 @@ def _build_launch(plan, *, rule, alpha, block, n, halo, shape, dtype,
 
 def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
                  grid_mode, fractal, storage, n, domain, coarsen,
-                 backend, stages=1):
+                 backend, stages=1, verify=False):
     domain, n, block, storage = resolve_storage_args(
         state, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
                     backend=backend)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="ca")
     fuse = effective_fuse(fuse, steps, block, plan.coarsen)
     sched = launch_schedule(steps, fuse)
     if not sched:
@@ -394,7 +397,7 @@ def _ca_run_impl(state, stale_buf, *, steps, fuse, rule, alpha, block,
 
 _CA_STATIC = ("steps", "fuse", "rule", "alpha", "block", "grid_mode",
               "fractal", "storage", "n", "domain", "coarsen", "backend",
-              "stages")
+              "stages", "verify")
 _CA_RUN_JIT = {
     False: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC),
     True: jax.jit(_ca_run_impl, static_argnames=_CA_STATIC,
@@ -404,7 +407,8 @@ _CA_RUN_JIT = {
 
 def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
                          block, grid_mode, fractal, storage, n, domain,
-                         coarsen, backend, mesh, shard_axis, stages=1):
+                         coarsen, backend, mesh, shard_axis, stages=1,
+                         verify=False):
     """ca_run across a mesh axis: each device advances its share of the
     domain; compact storage is slab-sharded with a ppermute ghost-row
     exchange before every launch, embedded storage is replicated and
@@ -421,6 +425,9 @@ def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
     plan = ShardedPlan(domain, grid_mode, storage=storage,
                        coarsen=coarsen, backend=backend, mesh=mesh,
                        axis=shard_axis, halo=(storage == "compact"))
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="ca")
     fuse = effective_fuse(fuse, steps, block, plan.coarsen)
     sched = launch_schedule(steps, fuse)
     if not sched:
@@ -553,7 +560,8 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
            domain: BlockDomain | None = None, coarsen: int | str = 1,
            num_stages: int | str = "auto", backend=None,
            interpret: bool | None = None, donate: bool | None = None,
-           mesh=None, shard_axis: str = "data") -> jnp.ndarray:
+           mesh=None, shard_axis: str = "data",
+           verify: bool = False) -> jnp.ndarray:
     """Advance the CA ``steps`` steps and return the final state.
 
     ``fuse=k`` executes k steps per kernel launch (one in-kernel
@@ -589,7 +597,10 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
 
     ``backend`` selects the emission target ("tpu" | "gpu" |
     "*-interpret" | None = platform default; see
-    :mod:`repro.core.backend`)."""
+    :mod:`repro.core.backend`).  ``verify=True`` statically verifies
+    the emitted plan (coverage / races / tables / bounds / aliasing;
+    :mod:`repro.analysis`) at trace time and raises on any
+    violation."""
     target = backend_lib.resolve(backend, interpret)
     grid_mode, fuse, coarsen, num_stages = auto_schedule(
         fractal=fractal, n=n or state.shape[0], block=block, rule=rule,
@@ -601,7 +612,8 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
     kw = dict(steps=int(steps), fuse=fuse, rule=rule, alpha=alpha,
               block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target, stages=target.resolve_stages(num_stages))
+              backend=target, stages=target.resolve_stages(num_stages),
+              verify=verify)
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[bool(donate)](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)
@@ -616,7 +628,8 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
             domain: BlockDomain | None = None, coarsen: int | str = 1,
             num_stages: int | str = "auto", backend=None,
             interpret: bool | None = None, mesh=None,
-            shard_axis: str = "data") -> jnp.ndarray:
+            shard_axis: str = "data",
+            verify: bool = False) -> jnp.ndarray:
     """One CA step (the ``steps=1`` slice of :func:`ca_run`).
 
     ``stale_buf`` must be zero outside the fractal (e.g. the state from
@@ -631,7 +644,7 @@ def ca_step(state: jnp.ndarray, stale_buf: jnp.ndarray, *,
     kw = dict(steps=1, fuse=1, rule=rule, alpha=alpha, block=block,
               grid_mode=grid_mode, fractal=fractal, storage=storage,
               n=n, domain=domain, coarsen=coarsen, backend=target,
-              stages=target.resolve_stages(num_stages))
+              stages=target.resolve_stages(num_stages), verify=verify)
     if mesh is not None:
         return _CA_RUN_SHARD_JIT[False](
             state, stale_buf, mesh=mesh, shard_axis=shard_axis, **kw)

@@ -283,13 +283,17 @@ def _emit_write(plan: GridPlan, shape, dtype, *, value, block, n,
 @functools.partial(jax.jit,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
-                                    "coarsen", "backend", "stages"))
+                                    "coarsen", "backend", "stages",
+                                    "verify"))
 def _write_impl(m, value, *, block, grid_mode, fractal, storage, n,
-                domain, coarsen, backend, stages=1):
+                domain, coarsen, backend, stages=1, verify=False):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
                     backend=backend)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="write")
     call = _emit_write(plan, m.shape, m.dtype, value=value, block=block,
                        n=n, stages=stages)
     return call(m)
@@ -314,10 +318,10 @@ def _sharded_setup(m, *, block, grid_mode, fractal, storage, n, domain,
                    static_argnames=("value", "block", "grid_mode",
                                     "fractal", "storage", "n", "domain",
                                     "coarsen", "backend", "mesh",
-                                    "shard_axis", "stages"))
+                                    "shard_axis", "stages", "verify"))
 def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
                         n, domain, coarsen, backend, mesh, shard_axis,
-                        stages=1):
+                        stages=1, verify=False):
     """Sharded write: each device writes its share of the domain.
     Compact storage writes its orthotope row slab in place; embedded
     storage combines the replicated per-device results with a disjoint
@@ -330,6 +334,9 @@ def _write_sharded_impl(m, value, *, block, grid_mode, fractal, storage,
         m, block=block, grid_mode=grid_mode, fractal=fractal,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
         shard_axis=shard_axis, backend=backend)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="write")
     call = _emit_write(plan, plan.local_storage_shape(block), m.dtype,
                        value=value, block=block, n=n, stages=stages)
     axis = shard_axis
@@ -365,7 +372,8 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
                      coarsen: int | str = 1,
                      num_stages: int | str = "auto", backend=None,
                      interpret: bool | None = None, mesh=None,
-                     shard_axis: str = "data") -> jnp.ndarray:
+                     shard_axis: str = "data",
+                     verify: bool = False) -> jnp.ndarray:
     """Write ``value`` to every fractal cell of the (n, n) state.
 
     grid_mode: closed_form (alias compact) | prefetch_lut | bounding |
@@ -379,7 +387,10 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
     capable targets, "auto" = tuned; bit-identical either way);
     mesh/shard_axis: shard the write across
     a mesh axis (embarrassing: disjoint block ownership, psum combine
-    under embedded storage)."""
+    under embedded storage); verify: statically verify the emitted plan
+    (coverage / races / tables / bounds, :mod:`repro.analysis`) at
+    trace time, raising on any violation -- a debug flag, off by
+    default."""
     target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
     grid_mode, coarsen, num_stages = resolve_auto_schedule(
@@ -395,7 +406,8 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
         num_stages=(num_stages, "stages", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target, stages=target.resolve_stages(num_stages))
+              backend=target, stages=target.resolve_stages(num_stages),
+              verify=verify)
     if mesh is not None:
         return _write_sharded_impl(m, value, mesh=mesh,
                                    shard_axis=shard_axis, **kw)
@@ -508,13 +520,17 @@ def _emit_sum(plan: GridPlan, shape, *, block, n, stages=1,
 @functools.partial(jax.jit, static_argnames=("block", "grid_mode",
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
-                                             "backend", "stages"))
+                                             "backend", "stages",
+                                             "verify"))
 def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
-              coarsen, backend, stages=1):
+              coarsen, backend, stages=1, verify=False):
     domain, n, block, storage = resolve_storage_args(
         m, block, fractal, storage, n, domain)
     plan = GridPlan(domain, grid_mode, storage=storage, coarsen=coarsen,
                     backend=backend)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="sum")
     call, finish = _emit_sum(plan, m.shape, block=block, n=n,
                              stages=stages, dtype=m.dtype)
     return finish(call(m))[0, 0]
@@ -524,10 +540,11 @@ def _sum_impl(m, *, block, grid_mode, fractal, storage, n, domain,
                                              "fractal", "storage", "n",
                                              "domain", "coarsen",
                                              "backend", "mesh",
-                                             "shard_axis", "stages"))
+                                             "shard_axis", "stages",
+                                             "verify"))
 def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
                       domain, coarsen, backend, mesh, shard_axis,
-                      stages=1):
+                      stages=1, verify=False):
     """Sharded sum: each device accumulates its owned blocks, one psum
     reduces across the axis.  The per-device accumulation order differs
     from the single-device grid order, so results agree to float
@@ -539,6 +556,9 @@ def _sum_sharded_impl(m, *, block, grid_mode, fractal, storage, n,
         m, block=block, grid_mode=grid_mode, fractal=fractal,
         storage=storage, n=n, domain=domain, coarsen=coarsen, mesh=mesh,
         shard_axis=shard_axis, backend=backend)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(plan, kernel="sum")
     local_shape = plan.local_storage_shape(block)
     call, finish = _emit_sum(plan, local_shape, block=block, n=n,
                              stages=stages, dtype=m.dtype)
@@ -566,7 +586,8 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
                    coarsen: int | str = 1,
                    num_stages: int | str = "auto", backend=None,
                    interpret: bool | None = None, mesh=None,
-                   shard_axis: str = "data") -> jnp.ndarray:
+                   shard_axis: str = "data",
+                   verify: bool = False) -> jnp.ndarray:
     """f32 sum over fractal cells, sequential accumulate over the plan's
     grid (any lowering; the output block is revisited every step).  The
     grid enumeration -- and therefore the accumulation order -- depends
@@ -589,7 +610,8 @@ def sierpinski_sum(m: jnp.ndarray, *, block: int = 128,
         num_stages=(num_stages, "stages", 1))
     kw = dict(block=block, grid_mode=grid_mode, fractal=fractal,
               storage=storage, n=n, domain=domain, coarsen=coarsen,
-              backend=target, stages=target.resolve_stages(num_stages))
+              backend=target, stages=target.resolve_stages(num_stages),
+              verify=verify)
     if mesh is not None:
         return _sum_sharded_impl(m, mesh=mesh, shard_axis=shard_axis,
                                  **kw)

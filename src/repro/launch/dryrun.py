@@ -19,7 +19,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import ARCHS, META, SHAPES, cells, get_config  # noqa: E402
+from repro.configs import META, SHAPES, cells, get_config  # noqa: E402
 from repro.distributed import sharding as shard_lib  # noqa: E402
 from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402

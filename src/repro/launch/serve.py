@@ -10,7 +10,7 @@ import argparse
 import dataclasses
 import time
 from functools import partial
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ import argparse
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -51,7 +51,6 @@ def _queries(p, x, cfg, positions):
 def _latents(p, x, cfg, positions):
     """Compressed kv latent + roped shared key.  c_kv: (B,S,L); k_rope
     (B,1,S,dr)."""
-    dr = cfg.qk_rope_dim
     kv_a = x @ p["wkv_a"].astype(x.dtype)
     c_kv, k_rope = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
     c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv, cfg.norm_eps)

@@ -17,13 +17,11 @@ so the same scan drives both.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import layers as L
 from . import mla as mla_lib

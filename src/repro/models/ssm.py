@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .layers import dense_init, rmsnorm, split
 
@@ -134,7 +133,6 @@ def _mamba1_inner(p, x1, z, cfg):
 def mamba1_block(p, x, cfg, *, return_cache=False):
     """x: (B,S,D) -> (B,S,D).  Train/prefill (no incoming state)."""
     b, s, _ = x.shape
-    di = cfg.d_inner
     xz = x @ p["in_proj"].astype(x.dtype)
     x1, z = jnp.split(xz, 2, axis=-1)
     if return_cache:

@@ -9,7 +9,6 @@ archs: fully-sharded state is what makes 236B trainable on 256 chips).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,9 @@ def schedule_lr(cfg: AdamWConfig, step):
 
 def init_state(params, cfg: AdamWConfig):
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "count": jnp.zeros((), jnp.int32)}

@@ -8,12 +8,10 @@ optimizer trajectory (Seide et al. 2014; Karimireddy et al. 2019).
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 BLOCK = 256
 

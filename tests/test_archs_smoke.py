@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, META, SHAPES, cells, get_config
+from repro.configs import ARCHS, cells, get_config
 from repro.models import init, logits_fn, loss_fn
 from repro.models.model import group_layout
 

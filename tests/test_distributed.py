@@ -6,7 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,5 +1,4 @@
 """Tests for the block-space domain abstraction (repro.core.domain)."""
-import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 

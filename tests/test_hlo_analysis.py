@@ -3,7 +3,6 @@ collective accounting -- validated against analytic counts on real
 compiled modules (the property XLA's own cost_analysis lacks)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze, parse_module

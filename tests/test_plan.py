@@ -16,9 +16,8 @@ import numpy as np
 import pytest
 
 from repro.core import fractal as F
-from repro.core.domain import (BandDomain, BoundingBoxDomain,
-                               GeneralizedFractalDomain, SierpinskiDomain,
-                               TriangularDomain, make_fractal_domain)
+from repro.core.domain import (GeneralizedFractalDomain, SierpinskiDomain,
+                               make_fractal_domain)
 from repro.core.plan import (LOWERINGS, GridPlan, normalize_lowering,
                              registered_domains, xla_schedule)
 from repro.kernels import ops, ref

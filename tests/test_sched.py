@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fractal as F
 from repro.core import tune
 from repro.core.compact import NEIGHBOR_OFFSETS8, CompactLayout, SuperTiling
 from repro.core.domain import (SierpinskiDomain, TriangularDomain,

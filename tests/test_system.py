@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the whole system: train -> checkpoint
 -> preempt/restart -> serve, on the quickstart arch."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticPipeline
