@@ -15,6 +15,8 @@ import json
 import os
 import shutil
 import time
+import zipfile
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -100,17 +102,28 @@ class CheckpointManager:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # torn .tmp dirs are debris from a save that never published
+        # (preemption mid-write); any still present belong to no
+        # in-flight save and would shadow disk forever
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
-    def restore(self, step: Optional[int], params_template,
-                opt_template=None, shardings=None
-                ) -> Tuple[int, Any, Any, Dict]:
-        """Elastic restore: ``shardings`` (optional pytree of NamedSharding
-        for the *new* mesh) re-lays-out each leaf with jax.device_put."""
+    def read_meta(self, step: Optional[int] = None) -> Dict:
+        """The JSON metadata sidecar of ``step`` (default: latest) --
+        readable without knowing the parameter tree, which is how the
+        serving layer discovers the shapes of a decode-state checkpoint
+        before restoring it."""
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with open(os.path.join(self._step_dir(step), "meta.json")) as f:
+            return json.load(f)
+
+    def _restore_one(self, step: int, params_template, opt_template):
         d = self._step_dir(step)
         with np.load(os.path.join(d, "params.npz")) as z:
             params = _unflatten_like(params_template, dict(z))
@@ -119,9 +132,46 @@ class CheckpointManager:
                 os.path.join(d, "opt.npz")):
             with np.load(os.path.join(d, "opt.npz")) as z:
                 opt_state = _unflatten_like(opt_template, dict(z))
-        if shardings is not None:
-            params = jax.tree.map(
-                lambda x, s: jax.device_put(x, s), params, shardings)
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
-        return step, params, opt_state, meta
+        return params, opt_state, meta
+
+    def restore(self, step: Optional[int], params_template,
+                opt_template=None, shardings=None
+                ) -> Tuple[int, Any, Any, Dict]:
+        """Elastic restore: ``shardings`` (optional pytree of NamedSharding
+        for the *new* mesh) re-lays-out each leaf with jax.device_put.
+
+        A torn checkpoint (truncated archive / missing sidecar from a
+        crash mid-write) is skipped when the step was auto-selected:
+        the restore falls back to the next older readable step and
+        records the skipped steps under ``meta["skipped_torn_steps"]``.
+        An explicitly requested step is never substituted -- a torn one
+        raises."""
+        explicit = step is not None
+        candidates = [step] if explicit else list(reversed(self.all_steps()))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        skipped = []
+        for s in candidates:
+            try:
+                params, opt_state, meta = self._restore_one(
+                    s, params_template, opt_template)
+            except (OSError, ValueError, KeyError, EOFError,
+                    zipfile.BadZipFile, zlib.error) as e:
+                if explicit:
+                    raise
+                skipped.append((s, f"{type(e).__name__}: {e}"))
+                continue
+            if shardings is not None:
+                params = jax.tree.map(
+                    lambda x, sh: jax.device_put(x, sh), params, shardings)
+            if skipped:
+                meta = dict(meta)
+                meta["skipped_torn_steps"] = [t for t, _ in skipped]
+                meta["skipped_torn_errors"] = [err for _, err in skipped]
+            return s, params, opt_state, meta
+        raise FileNotFoundError(
+            f"no readable checkpoints in {self.dir}: all "
+            f"{len(skipped)} candidates torn "
+            f"({'; '.join(err for _, err in skipped)})")

@@ -50,6 +50,39 @@ def default_cache_path() -> str:
         os.path.expanduser("~"), ".cache", "repro-tune.json")
 
 
+def _pos_int(v, hi: int = 1 << 20) -> bool:
+    return isinstance(v, int) and not isinstance(v, bool) and 0 < v <= hi
+
+
+def _sane_config(config: dict) -> bool:
+    """A cached winner is only trusted if every knob the kernels act on
+    carries a value the tuner could actually have produced -- an
+    unknown lowering / storage or a non-positive-integer schedule
+    factor marks the entry corrupt (tampered file, version skew, torn
+    write) and the lookup treats it as a miss so the kernel runs on
+    defaults.  Keys outside the known-knob set are left alone: callers
+    may cache richer configs (and tests cache synthetic ones)."""
+    if not config:
+        return False
+    from repro.core.plan import LOWERINGS
+    checks = {
+        "lowering": lambda v: v in LOWERINGS,
+        "storage": lambda v: v in ("embedded", "compact"),
+        "fuse": _pos_int,
+        "coarsen": _pos_int,
+        "stages": _pos_int,
+        "num_stages": _pos_int,
+        "block_q": _pos_int,
+        "block_k": _pos_int,
+        "num_warps": lambda v: v is None or _pos_int(v, 64),
+    }
+    for k, v in config.items():
+        check = checks.get(k)
+        if check is not None and not check(v):
+            return False
+    return True
+
+
 class TuneCache:
     """JSON-persisted map from tuning key to winning config.
 
@@ -82,7 +115,13 @@ class TuneCache:
 
     def get(self, kernel: str, params: dict) -> Optional[dict]:
         entry = self._load().get(self.key(kernel, params))
-        return dict(entry["config"]) if entry else None
+        if not isinstance(entry, dict) or not isinstance(
+                entry.get("config"), dict):
+            return None
+        config = dict(entry["config"])
+        if not _sane_config(config):
+            return None  # corrupt / tampered entry reads as a miss
+        return config
 
     def put(self, kernel: str, params: dict, config: dict, us: float,
             save: bool = True) -> None:

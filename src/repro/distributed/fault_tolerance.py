@@ -62,19 +62,30 @@ class PreemptionGuard:
 
 
 def retry_step(fn, *args, retries: int = 3, backoff_s: float = 1.0,
-               on_retry: Optional[Callable[[int, Exception], None]] = None):
-    """Run ``fn(*args)`` retrying on transient XLA/runtime errors."""
+               on_retry: Optional[Callable[[int, Exception], None]] = None,
+               jitter: float = 0.5, seed: int = 0,
+               sleep: Callable[[float], None] = time.sleep):
+    """Run ``fn(*args)``, retrying only errors classified *transient*
+    (preemption / interconnect / resource families -- see
+    :func:`repro.runtime.guard.classify_error`) with seeded-jittered
+    exponential backoff.  Fatal errors (shape / compile / programming
+    errors) re-raise immediately: retrying those just fails slower.
+    Exhausted retries re-raise the last transient error."""
+    from repro.runtime.guard import Backoff, classify_error
+    backoff = Backoff(base_s=backoff_s, jitter=jitter, seed=seed)
     attempt = 0
     while True:
         try:
             return fn(*args)
-        except (RuntimeError, jax_runtime_errors()) as e:  # pragma: no cover
+        except Exception as e:  # noqa: BLE001 - triage point
+            if classify_error(e) == "fatal":
+                raise
             attempt += 1
             if attempt > retries:
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(backoff_s * (2 ** (attempt - 1)))
+            sleep(backoff.delay(attempt))
 
 
 def jax_runtime_errors():

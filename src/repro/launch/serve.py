@@ -1,13 +1,36 @@
-"""Batched serving: prefill -> slot-based decode loop with temperature /
-greedy sampling and continuous-batching-style slot replacement.
+"""Guarded batched serving: prefill -> slot-based decode loop with
+EOS-aware slot masking, replay-deterministic sampling, and a
+detect-degrade-recover runtime around every jitted call.
+
+Robustness model (see :mod:`repro.runtime`):
+
+* every prefill/decode call runs under a
+  :class:`~repro.runtime.guard.GuardedCall` -- per-call deadline,
+  NaN/inf output screens, transient-vs-fatal classification, jittered
+  backoff retries;
+* sampling keys derive from ``(seed, slot, position)`` via
+  ``jax.random.fold_in`` (pure coordinates, no mutated RNG state), so
+  a retried or resumed decode step reproduces the identical stream;
+* repeated failure walks a :class:`DegradationLadder`
+  (blockspace -> xla decode, exotic lowering -> closed_form),
+  re-jitting the decode step per rung and recording each transition;
+* SIGTERM flips the state machine healthy -> draining: the decode
+  state (prompts + generated tokens + position) checkpoints atomically
+  and a successor process resumes mid-generation
+  (:meth:`Server.resume`), bit-identical to an uninterrupted run;
+* exhausted recovery emits a machine-readable
+  :class:`~repro.runtime.guard.FailureReport`.
 
 Runnable directly:
     PYTHONPATH=src python -m repro.launch.serve --arch quickstart
+Chaos-smoke (deterministic fault injection; see repro.runtime.chaos):
+    PYTHONPATH=src python -m repro.launch.serve --chaos-seed 7
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 from functools import partial
 from typing import Optional
@@ -17,9 +40,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.distributed import sharding as shard_lib
+from repro.distributed.fault_tolerance import PreemptionGuard
 from repro.models import ModelConfig, decode_step, init, prefill
 from repro.models import model as model_lib
-from repro.distributed import sharding as shard_lib
+from repro.runtime.guard import (Backoff, DegradationLadder, GuardedCall,
+                                 GuardExhausted, ServerState, sample_key,
+                                 spot_check, validate_finite)
 
 
 @dataclasses.dataclass
@@ -29,45 +56,267 @@ class ServeConfig:
     top_k: int = 40
     seed: int = 0
     eos_id: int = -1               # -1 = never stop early
+    # -- robustness ---------------------------------------------------------
+    guard: bool = True             # False = raw jitted calls (no retries)
+    retries: int = 3
+    backoff_base_s: float = 0.05
+    deadline_s: Optional[float] = None
+    enforce_deadline: bool = False
+    validate: bool = True          # NaN/inf screen on every output
+    spot_check_every: int = 0      # decode steps between lambda canaries
+    ckpt_dir: Optional[str] = None  # decode-state checkpoint directory
+    ckpt_every: int = 0            # decode steps between checkpoints
+    report_dir: Optional[str] = None  # failure reports land here
 
 
 class Server:
-    """Holds jitted prefill/decode closures over a fixed batch shape."""
+    """Holds guarded jitted prefill/decode closures over a fixed batch
+    shape, plus the serving state machine (healthy -> degraded ->
+    draining) and the degradation ladder."""
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None, chaos=None):
         self.cfg, self.params, self.scfg, self.mesh = cfg, params, scfg, mesh
-        self._prefill = jax.jit(
+        self.chaos = chaos
+        self.state = ServerState.HEALTHY
+        self.events: list = []
+        self.ladder = DegradationLadder(
+            self._rungs(cfg),
+            on_transition=lambda rec: self.events.append(
+                {"kind": "degrade", **rec}))
+        self._base_key = jax.random.PRNGKey(scfg.seed)
+        self._canary_ref = None
+        self._ckpt = None
+        if scfg.ckpt_dir:
+            from repro.checkpoint.manager import CheckpointManager
+            self._ckpt = CheckpointManager(scfg.ckpt_dir, keep=2)
+        self._prefill_fn = jax.jit(
             partial(prefill, cfg=cfg, max_len=scfg.max_len))
-        self._decode = jax.jit(partial(decode_step, cfg=cfg))
-        self._rng = jax.random.PRNGKey(scfg.seed)
+        self._decode_fn = None
+        self._apply_rung(self.ladder.current())
+        self._prefill = self._guarded("serve.prefill",
+                                      lambda *a: self._prefill_fn(*a))
+        self._decode = self._guarded("serve.decode",
+                                     lambda *a: self._decode_fn(*a))
 
-    def _sample(self, logits):
-        """logits (B,1,V) -> tokens (B,1)."""
+    # -- degradation ladder --------------------------------------------------
+
+    @staticmethod
+    def _rungs(cfg: ModelConfig) -> list:
+        """Fallback configs, as-configured first: blockspace decode
+        degrades to the XLA decode path, an exotic attention lowering
+        (compact / prefetch_lut) degrades to the inline closed form."""
+        top = {"decode_kernel": cfg.attn_decode_kernel,
+               "grid_lowering": cfg.grid_lowering}
+        rungs = [top]
+        if cfg.attn_decode_kernel == "blockspace":
+            rungs.append({**top, "decode_kernel": "xla"})
+        if cfg.grid_lowering in ("compact", "prefetch_lut"):
+            rungs.append({"decode_kernel": "xla",
+                          "grid_lowering": "closed_form"})
+        return rungs
+
+    def _apply_rung(self, rung: dict) -> None:
+        """Re-jit the decode step under this rung's config (prefill and
+        the cache layout are rung-independent)."""
+        cfg = self.cfg.replace(attn_decode_kernel=rung["decode_kernel"],
+                               grid_lowering=rung["grid_lowering"])
+        self._decode_fn = jax.jit(partial(decode_step, cfg=cfg))
+
+    # -- guard plumbing ------------------------------------------------------
+
+    def _guarded(self, site: str, fn):
+        if self.chaos is not None:
+            fn = self.chaos.wrap(site, fn, rung=lambda: self.ladder.level)
+        if not self.scfg.guard:
+            return fn
+        validators = []
+        if self.scfg.validate:
+            validators.append(lambda o, s=site: validate_finite(o, s))
+        return GuardedCall(
+            fn, site, retries=self.scfg.retries,
+            backoff=Backoff(base_s=self.scfg.backoff_base_s,
+                            seed=self.scfg.seed),
+            deadline_s=self.scfg.deadline_s,
+            enforce_deadline=self.scfg.enforce_deadline,
+            validators=validators,
+            on_event=self.events.append,
+            before_retry=(self.chaos.refresh if self.chaos is not None
+                          else None))
+
+    def _decode_step(self, tok, cache, pos):
+        """One guarded decode step; on exhausted recovery, walk the
+        degradation ladder and re-execute on the lower rung."""
+        while True:
+            try:
+                return self._decode(self.params, tok, cache,
+                                    jnp.asarray(pos, jnp.int32))
+            except GuardExhausted as e:
+                if not self.ladder.step_down(reason=str(e)):
+                    e.report.transitions = list(self.ladder.transitions)
+                    self._write_report(e.report)
+                    raise
+                self.state = ServerState.DEGRADED
+                self._apply_rung(self.ladder.current())
+
+    def _write_report(self, report) -> Optional[str]:
+        if not self.scfg.report_dir:
+            return None
+        path = os.path.join(self.scfg.report_dir,
+                            f"failure_{report.name.replace('.', '_')}.json")
+        return report.write(path)
+
+    # -- lambda canary -------------------------------------------------------
+
+    def check_substrate(self) -> None:
+        """Spot-check the Pallas substrate: rerun a tiny known-good
+        block-space launch and demand a bit-identical result (the repo
+        invariant).  Raises ValidationError on mismatch."""
+        from repro.kernels.sierpinski_write import sierpinski_write
+
+        def canary():
+            return sierpinski_write(jnp.zeros((16, 16), jnp.float32), 1.0,
+                                    block=4, grid_mode="closed_form",
+                                    coarsen=1, num_stages=1)
+
+        out = canary()
+        if self._canary_ref is None:
+            self._canary_ref = np.asarray(out)
+            return
+        spot_check(self._canary_ref, "lambda canary")(out)
+
+    # -- sampling ------------------------------------------------------------
+
+    def _sample(self, logits, pos: int):
+        """logits (B,1,V) -> tokens (B,1).  Keys are a pure function of
+        (seed, slot, position): a retried / replayed step samples the
+        identical token."""
         if self.scfg.temperature <= 0:
             return jnp.argmax(logits[:, 0], axis=-1)[:, None]
-        self._rng, k = jax.random.split(self._rng)
         scaled = logits[:, 0].astype(jnp.float32) / self.scfg.temperature
         if self.scfg.top_k:
             v, _ = jax.lax.top_k(scaled, self.scfg.top_k)
             scaled = jnp.where(scaled < v[:, -1:], -1e30, scaled)
-        return jax.random.categorical(k, scaled)[:, None]
+        keys = sample_key(self._base_key, pos, scaled.shape[0])
+        return jax.vmap(jax.random.categorical)(keys, scaled)[:, None]
+
+    # -- decode-state checkpointing ------------------------------------------
+
+    def _save_decode_state(self, prompts, out, pos: int,
+                           max_new: int) -> None:
+        if self._ckpt is None:
+            return
+        tokens = np.concatenate([np.asarray(t) for t in out], axis=1)
+        state = {"prompts": np.asarray(prompts, np.int32),
+                 "tokens": tokens.astype(np.int32)}
+        self._ckpt.save(len(out), state,
+                        extra={"pos": int(pos), "max_new": int(max_new),
+                               "batch": int(tokens.shape[0]),
+                               "prompt_len": int(np.shape(prompts)[1]),
+                               "num_tokens": int(tokens.shape[1])})
+
+    # -- generation ----------------------------------------------------------
 
     def generate(self, prompts: np.ndarray, max_new: int = 32):
         """prompts: (B, S) int tokens (token-input archs).  Returns the
-        generated (B, max_new) continuation."""
+        generated (B, T) continuation, T = max_new unless every slot
+        hit ``eos_id`` (or a preemption drained the server) earlier;
+        finished slots pad with ``eos_id``."""
+        if self.state == ServerState.DRAINING:
+            raise RuntimeError("server is draining; start a successor "
+                               "and resume() from the decode checkpoint")
+        scfg = self.scfg
         ctx = self.mesh if self.mesh is not None else _null()
-        with ctx:
-            logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-            pos = prompts.shape[1] - 1
-            tok = self._sample(logits)
+        with PreemptionGuard() as preempt, ctx:
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(prompts))
+            batch = np.shape(prompts)[0]
+            pos = np.shape(prompts)[1] - 1
+            finished = np.zeros((batch,), bool)
+            tok, finished = self._next_token(logits, pos, finished)
             out = [tok]
             for i in range(max_new - 1):
+                if scfg.eos_id >= 0 and finished.all():
+                    break
+                if preempt.fired:
+                    self._drain(prompts, out, pos, max_new)
+                    break
                 pos += 1
-                logits, cache = self._decode(self.params, tok, cache,
-                                             jnp.asarray(pos, jnp.int32))
-                tok = self._sample(logits)
+                logits, cache = self._decode_step(tok, cache, pos)
+                tok, finished = self._next_token(logits, pos, finished)
                 out.append(tok)
+                if (scfg.spot_check_every
+                        and (i + 1) % scfg.spot_check_every == 0):
+                    self.check_substrate()
+                if scfg.ckpt_every and len(out) % scfg.ckpt_every == 0:
+                    self._save_decode_state(prompts, out, pos, max_new)
+            else:
+                if preempt.fired:
+                    self._drain(prompts, out, pos, max_new)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    def _next_token(self, logits, pos: int, finished: np.ndarray):
+        """Sample, then overwrite finished slots with the EOS pad and
+        fold newly-finished slots into the mask."""
+        tok = self._sample(logits, pos)
+        if self.scfg.eos_id < 0:
+            return tok, finished
+        tok = np.asarray(tok)
+        tok = np.where(finished[:, None], self.scfg.eos_id, tok)
+        finished = finished | (tok[:, 0] == self.scfg.eos_id)
+        return jnp.asarray(tok), finished
+
+    def _drain(self, prompts, out, pos: int, max_new: int) -> None:
+        self.state = ServerState.DRAINING
+        self.events.append({"kind": "drain", "pos": int(pos),
+                            "tokens": len(out), "time": time.time()})
+        self._save_decode_state(prompts, out, pos, max_new)
+
+    # -- resume --------------------------------------------------------------
+
+    def resume(self):
+        """Resume a drained/preempted generation from the decode-state
+        checkpoint: replay the saved tokens through prefill + decode to
+        rebuild the KV cache (feeding the *saved* token at each replayed
+        position -- no re-sampling, no drift), then keep sampling with
+        the same (seed, slot, position) keys.  The full returned stream
+        is bit-identical to an uninterrupted run."""
+        if self._ckpt is None:
+            raise RuntimeError("resume() needs ServeConfig.ckpt_dir")
+        meta = self._ckpt.read_meta()
+        e = meta["extra"]
+        template = {
+            "prompts": np.zeros((e["batch"], e["prompt_len"]), np.int32),
+            "tokens": np.zeros((e["batch"], e["num_tokens"]), np.int32)}
+        _, state, _, _ = self._ckpt.restore(meta["step"], template)
+        prompts, saved = state["prompts"], np.asarray(state["tokens"])
+        max_new = e["max_new"]
+        ctx = self.mesh if self.mesh is not None else _null()
+        with ctx:
+            logits, cache = self._prefill(self.params,
+                                          jnp.asarray(prompts))
+            pos = prompts.shape[1] - 1
+            finished = np.zeros((prompts.shape[0],), bool)
+            out = []
+            tok = jnp.asarray(saved[:, 0:1])
+            out.append(tok)
+            for i in range(1, saved.shape[1]):
+                pos += 1
+                logits, cache = self._decode_step(tok, cache, pos)
+                tok = jnp.asarray(saved[:, i:i + 1])
+                out.append(tok)
+            if self.scfg.eos_id >= 0:
+                finished = (saved == self.scfg.eos_id).any(axis=1)
+            for _ in range(saved.shape[1], max_new):
+                if self.scfg.eos_id >= 0 and finished.all():
+                    break
+                pos += 1
+                logits, cache = self._decode_step(tok, cache, pos)
+                tok, finished = self._next_token(logits, pos, finished)
+                out.append(tok)
+        self.state = ServerState.HEALTHY
+        self.events.append({"kind": "resume", "replayed": saved.shape[1],
+                            "total": len(out), "time": time.time()})
         return np.asarray(jnp.concatenate(out, axis=1))
 
 
@@ -97,6 +346,21 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="stop a slot early when it samples this token "
+                         "(-1 = never)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="guarded-call retry budget per step")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-call deadline in seconds (recorded; "
+                         "enforcement via ServeConfig)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="decode-state checkpoint directory (enables "
+                         "preemption-safe draining + resume)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="serve under deterministic randomized fault "
+                         "injection (repro.runtime.chaos) with this "
+                         "seed -- the serving smoke CI runs")
     ap.add_argument("--grid-lowering", default="",
                     choices=("", "closed_form", "prefetch_lut", "bounding",
                              "compact"),
@@ -154,14 +418,33 @@ def main():
             params = init_fn(jax.random.PRNGKey(0))
     else:
         params = init(jax.random.PRNGKey(0), cfg)
+    chaos = None
+    if args.chaos_seed is not None:
+        from repro.runtime.chaos import ChaosInjector, FaultPlan
+        plan = FaultPlan.from_seed(
+            args.chaos_seed, sites=("serve.prefill", "serve.decode"),
+            horizon=args.max_new)
+        chaos = ChaosInjector(plan)
+        print(f"chaos: {len(plan.faults)} faults scheduled "
+              f"(seed {plan.seed})")
     server = Server(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
-        temperature=args.temperature), mesh=mesh)
+        temperature=args.temperature, eos_id=args.eos_id,
+        retries=args.retries, deadline_s=args.deadline,
+        ckpt_dir=args.ckpt_dir or None,
+        ckpt_every=4 if args.ckpt_dir else 0), mesh=mesh, chaos=chaos)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len))
     out = server.generate(prompts, max_new=args.max_new)
     print("generated shape:", out.shape)
+    if chaos is not None:
+        recov = sum(getattr(g, "recoveries", 0)
+                    for g in (server._prefill, server._decode))
+        print(f"chaos: {len(chaos.events)} faults fired, "
+              f"{recov} recoveries, state {server.state.value}")
+        if not np.isfinite(np.asarray(out, np.float64)).all():
+            raise SystemExit("chaos smoke: corrupted output escaped")
     print(throughput_report(server, args.batch, args.prompt_len,
                             args.max_new))
 

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 from functools import partial
 from typing import Dict, Optional
@@ -21,7 +22,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.distributed import sharding as shard_lib
-from repro.distributed.fault_tolerance import Heartbeat, PreemptionGuard
+from repro.distributed.fault_tolerance import (Heartbeat, PreemptionGuard,
+                                               retry_step)
 from repro.models import ModelConfig, init, loss_fn
 from repro.models import model as model_lib
 from repro.optim.adamw import (AdamWConfig, apply_updates, init_state)
@@ -39,6 +41,8 @@ class TrainConfig:
     fsdp: bool = False
     seq_shard_acts: bool = False
     straggler_deadline_s: float = 600.0
+    step_retries: int = 3          # transient-classified retries per step
+    retry_backoff_s: float = 0.5   # jittered-exponential backoff base
     optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
 
 
@@ -161,6 +165,22 @@ class Trainer:
                   for k, v in sh.items()}
         return {k: jax.device_put(v, sh[k]) for k, v in batch.items()}
 
+    def _write_failure(self, step: int, exc: BaseException) -> str:
+        """Publish a machine-readable failure report next to the
+        checkpoints before the train loop dies."""
+        from repro.runtime.guard import FailureReport, classify_error
+        report = FailureReport(
+            name="train.step", error=str(exc),
+            error_type=type(exc).__name__,
+            classification=classify_error(exc),
+            attempts=1 + self.tcfg.step_retries, time=time.time())
+        path = os.path.join(self.tcfg.ckpt_dir,
+                            f"failure_step_{step:010d}.json")
+        try:
+            return report.write(path)
+        except OSError:
+            return ""
+
     def run(self, pipeline: SyntheticPipeline, steps: Optional[int] = None):
         steps = steps or self.tcfg.steps
         start, params, opt_state = self.restore_or_init(pipeline)
@@ -176,8 +196,17 @@ class Trainer:
             for step in range(start, steps):
                 batch = self._device_batch(pipeline.next_batch())
                 t0 = time.perf_counter()
-                params, opt_state, metrics = self._step(
-                    params, opt_state, batch)
+                try:
+                    params, opt_state, metrics = retry_step(
+                        self._step, params, opt_state, batch,
+                        retries=self.tcfg.step_retries,
+                        backoff_s=self.tcfg.retry_backoff_s,
+                        seed=self.tcfg.seed,
+                        on_retry=lambda a, e: print(
+                            f"[retry] step {step} attempt {a}: {e}"))
+                except Exception as e:
+                    self._write_failure(step, e)
+                    raise
                 metrics = {k: float(v) for k, v in metrics.items()}
                 metrics["step_time_s"] = time.perf_counter() - t0
                 hb.beat()
