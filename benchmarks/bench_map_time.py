@@ -1,11 +1,18 @@
 """Mapping-cost scaling: time the lambda(w) map itself (all blocks of a
-level-r gasket) and the triangular/band decodes, jitted on CPU.
+level-r gasket) under every registered GridPlan lowering, plus the
+triangular/band decodes, jitted on CPU.
 
 The paper's Theorem 1 cost is O(log log n) per block WITH a |B|-thread
 reduction; on TPU the map runs as scalar index_map code of O(log n)
 unrolled adds hidden behind the DMA pipeline (DESIGN.md SS2 deviation 1).
 What we measure here is the full-grid map throughput, which is what the
-XLA analogue actually pays.
+XLA analogue actually pays -- per lowering, so the decode strategies
+(inline integer unroll, LUT gather, dense-grid discard, digit-basis
+matmul) land on the same axis.
+
+The sweep is driven from :data:`repro.core.plan.LOWERINGS`: registering
+a fifth lowering without teaching this benchmark its decode fails
+loudly instead of silently dropping the row family.
 """
 from __future__ import annotations
 
@@ -15,24 +22,73 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fractal as F
+from repro.core import mma
 from repro.core.domain import TriangularDomain
+from repro.core.plan import LOWERINGS
 from .common import row, time_fn
 
 
 @functools.partial(jax.jit, static_argnames=("r",))
-def map_all(r):
-    i = jnp.arange(3 ** r, dtype=jnp.int32)
+def map_closed_form(i, r):
     lx, ly = F.lambda_map_linear(i, r)
     return lx + ly
 
 
-def run():
-    print("# lambda map throughput (all 3^r blocks, jitted)")
-    for r in range(4, 14):
-        us = time_fn(map_all, r, iters=10)
+@jax.jit
+def map_prefetch_lut(i, lut):
+    return lut[i, 0] + lut[i, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def map_bounding(r):
+    # the run-time-discard baseline decodes its full 2^r x 2^r grid
+    n = 2 ** r
+    i = jnp.arange(n * n, dtype=jnp.int32)
+    return i % n + i // n
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def map_mma(i, r):
+    bx, by = mma.decode_linear(F.SIERPINSKI, r, i)
+    return bx + by
+
+
+def run_lowering_sweep(iters: int = 10):
+    print("# lambda map throughput per registered lowering (all 3^r")
+    print("#   member blocks, jitted; bounding decodes its 4^r dense")
+    print("#   grid -- the run-time-discard cost the compact map avoids)")
+    for r in range(4, 12):
         nb = 3 ** r
-        row(f"lambda_map/r={r}", us, f"blocks={nb};ns_per_block="
-            f"{1e3 * us / nb:.3f}")
+        i = jnp.arange(nb, dtype=jnp.int32)
+        lut = jnp.stack(F.lambda_map_linear(i, r), axis=1)
+        timers = {
+            "closed_form": lambda: time_fn(map_closed_form, i, r,
+                                           iters=iters),
+            "prefetch_lut": lambda: time_fn(map_prefetch_lut, i, lut,
+                                            iters=iters),
+            "bounding": lambda: time_fn(map_bounding, r, iters=iters),
+            "mma": lambda: time_fn(map_mma, i, r, iters=iters),
+        }
+        missing = set(LOWERINGS) - set(timers)
+        if missing:
+            raise RuntimeError(
+                f"bench_map_time has no decode timer for registered "
+                f"lowering(s) {sorted(missing)}")
+        blocks = {low: (4 ** r if low == "bounding" else nb)
+                  for low in LOWERINGS}
+        t0 = None
+        for low in LOWERINGS:
+            us = timers[low]()
+            if t0 is None:
+                t0 = us
+            row(f"lambda_map/{low}/r={r}", us,
+                f"blocks={blocks[low]};ns_per_block="
+                f"{1e3 * us / blocks[low]:.3f};"
+                f"speedup_vs_closed_form={t0 / us:.2f}")
+
+
+def run():
+    run_lowering_sweep()
     print("# triangular decode throughput")
     for m in (64, 256, 1024):
         t = TriangularDomain(m)

@@ -164,6 +164,37 @@ def run_backend_ab(iters: int = 5):
             f"{ca_times['bounding'] / ca_times['closed_form']:.2f}")
         row(f"backend_ca/{tname}/n={n}/rho={rho}/bounding",
             ca_times["bounding"], "")
+    run_map_mma_ab(iters=iters)
+
+
+def run_map_mma_ab(iters: int = 5):
+    """``map_mma/*``: the raw lambda decode itself, digit-basis matmul
+    (:mod:`repro.core.mma`, what the ``mma`` lowering computes on the
+    MXU / tensor cores) vs the integer closed form -- the map cost in
+    isolation, without a kernel around it."""
+    from repro.core import mma
+
+    print("# map_mma A/B: digit-basis matmul lambda decode vs the")
+    print("#   integer closed form (all 3^r blocks, jitted)")
+
+    @functools.partial(jax.jit, static_argnames=("r",))
+    def dec_int(i, r):
+        lx, ly = F.lambda_map_linear(i, r)
+        return lx + ly
+
+    @functools.partial(jax.jit, static_argnames=("r",))
+    def dec_mma(i, r):
+        bx, by = mma.decode_linear(F.SIERPINSKI, r, i)
+        return bx + by
+
+    for r in (6, 8, 10):
+        i = jnp.arange(3 ** r, dtype=jnp.int32)
+        t_int = time_fn(dec_int, i, r, warmup=2, iters=iters)
+        t_mma = time_fn(dec_mma, i, r, warmup=2, iters=iters)
+        row(f"map_mma/r={r}/closed_form", t_int, f"blocks={3 ** r}")
+        row(f"map_mma/r={r}/mma", t_mma,
+            f"blocks={3 ** r};"
+            f"speedup_vs_closed_form={t_int / t_mma:.2f}")
 
 
 def run(max_r: int = 11):

@@ -124,7 +124,7 @@ ACCESS_MODELS: Dict[str, Dict[str, Any]] = {
     "ca": {"race": True, "neighbors": True, "storage": True,
            "alias_reads": ("none",)},
     "flash": {"race": False, "neighbors": False, "storage": False,
-              "alias_reads": ()},
+              "alias_reads": (), "hulls": True},
 }
 
 
@@ -180,9 +180,11 @@ def host_prefetch_refs(plan: GridPlan, device: int = 0) -> Tuple:
     if not _is_sharded(plan):
         if plan.lowering == "prefetch_lut":
             return (np.asarray(plan.lut_host()),)
+        if plan._table_backed:  # mma on a block-indexed structure
+            return (np.asarray(plan.mma_table_host()),)
         return ()
     refs: Tuple = (np.asarray(plan.shard_table_host()[device]),)
-    if plan.lowering == "prefetch_lut":
+    if plan._table_backed:
         # per-device LUT chunk size is the *base* plan's steps_per_shard
         # (phase views indirect into the same chunk)
         if plan.partition == "storage-rows":
@@ -190,6 +192,8 @@ def host_prefetch_refs(plan: GridPlan, device: int = 0) -> Tuple:
         else:
             per = plan.steps_per_shard
         lut = plan.lut_sharded_host()
+        if lut is None:
+            lut = plan.mma_table_sharded_host()
         refs += (np.asarray(lut[device * per:(device + 1) * per]),)
     if plan.phase is not None:
         it, bt = plan.phase_tables_host()
@@ -425,7 +429,11 @@ def _check_tables(plan, findings):
     exp = np.zeros((n, 2), np.int64)
     exp[li, 0] = gx
     exp[li, 1] = gy
-    lut = np.asarray(plan.lut_host())
+    # for mma plans, verify the digit-basis matmul table -- the exact
+    # decode both structures consume (the gpu structure evaluates the
+    # same chains in-kernel, so the table *is* the chain output)
+    lut = np.asarray(plan.mma_table_host() if plan.lowering == "mma"
+                     else plan.lut_host())
     bad = np.nonzero((lut[:, _LUT_BX] != exp[:, 0])
                      | (lut[:, _LUT_BY] != exp[:, 1]))[0]
     for i in bad[:3]:
@@ -540,8 +548,10 @@ def _rederived_partition(plan):
 
 
 def _rederive_halo(plan):
-    """(ghost classes, interior steps, boundary steps) per device,
-    re-derived from the (already verified) neighbour tables."""
+    """(ghost classes, interior steps, boundary steps, column spans)
+    per device, re-derived from the (already verified) neighbour
+    tables.  Spans map (ghost row, class) -> the half-open slot-column
+    span of that row's readers."""
     if plan._tiling is not None:
         own = plan._tiling.tiles_host()
         nbrs = plan._tiling.neighbor_tiles_host()
@@ -550,31 +560,44 @@ def _rederive_halo(plan):
         nbrs = plan.layout.neighbor_slots_host()
     D, rpd = plan.num_shards, plan.rpd
     strips = plan.tile_map() is None
-    ghosts, ints, bnds = [], [], []
+    ghosts, ints, bnds, spans = [], [], [], []
     for d in range(D):
         lo, hi = d * rpd, min((d + 1) * rpd, plan.nrows)
         sel = (own[:, 1] >= lo) & (own[:, 1] < hi)
         nb, mine = nbrs[sel], own[sel]
         cls: Dict[int, set] = {}
+        span: Dict[tuple, tuple] = {}
         for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
-            ok = nb[:, j, 2] == 1
-            gr = nb[:, j, 1][ok]
-            gr = gr[(gr < lo) | (gr >= hi)]
+            rem = (nb[:, j, 2] == 1) \
+                & ((nb[:, j, 1] < lo) | (nb[:, j, 1] >= hi))
+            gr, gc = nb[:, j, 1][rem], nb[:, j, 0][rem]
             c = "top" if strips and dy == 1 else \
                 "bot" if strips and dy == -1 else "full"
             for g in np.unique(gr):
+                cols = gc[gr == g]
                 cls.setdefault(int(g), set()).add(c)
+                key = (int(g), c)
+                clo, chi = int(cols.min()), int(cols.max()) + 1
+                if key in span:
+                    plo, phi = span[key]
+                    span[key] = (min(plo, clo), max(phi, chi))
+                else:
+                    span[key] = (clo, chi)
         for g, s in cls.items():
             if "full" in s:
+                merged = [span.pop((g, c)) for c in s if (g, c) in span]
                 cls[g] = {"full"}
+                span[(g, "full")] = (min(x for x, _ in merged),
+                                     max(y for _, y in merged))
         ghosts.append(cls)
+        spans.append(span)
         remote = (nb[..., 2] == 1) \
             & ((nb[..., 1] < lo) | (nb[..., 1] >= hi))
         t_ids = (mine[:, 1] - lo) * plan.ncols + mine[:, 0]
         bnd = remote.any(axis=1)
         ints.append(sorted(int(t) for t in t_ids[~bnd]))
         bnds.append(sorted(int(t) for t in t_ids[bnd]))
-    return ghosts, ints, bnds
+    return ghosts, ints, bnds, spans
 
 
 def _check_shard_tables(plan, findings):
@@ -593,7 +616,7 @@ def _check_shard_tables(plan, findings):
             f"{tbl[:, SHARD_COUNT]} != re-derived {count}"))
     if plan.partition != "storage-rows":
         return
-    ghosts, ints, bnds = _rederive_halo(plan)
+    ghosts, ints, bnds, spans = _rederive_halo(plan)
     halo = plan.halo
     rpd = plan.rpd
     with_halo = halo is not None and halo.int_steps is not None
@@ -618,19 +641,20 @@ def _check_shard_tables(plan, findings):
                 f"{gmap[bad[:5]].tolist()}, expected "
                 f"{exp[bad[:5]].tolist()})", device=d))
     if with_halo:
-        _check_halo_rounds(plan, ghosts, findings)
+        _check_halo_rounds(plan, ghosts, spans, findings)
         _check_phase_tables(plan, ints, bnds, findings)
-    if plan.lowering == "prefetch_lut":
+    if plan._table_backed:
         _check_sharded_lut(plan, findings)
 
 
-def _check_halo_rounds(plan, ghosts, findings):
+def _check_halo_rounds(plan, ghosts, spans, findings):
     """Simulate the ppermute rounds and check every ghost row's strip
-    requirement is delivered to its slot exactly."""
+    requirement is delivered to its slot exactly, with a column window
+    that covers its readers' span."""
     halo, D, rpd = plan.halo, plan.num_shards, plan.rpd
     order = [sorted(g) for g in ghosts]
     delivered: List[Dict[int, set]] = [dict() for _ in range(D)]
-    for delta, cls, send, recv in halo.rounds:
+    for delta, cls, send, recv, scol, rcol, wc in halo.rounds:
         m = send.shape[1]
         for d in range(D):
             src = (d - delta) % D
@@ -647,6 +671,21 @@ def _check_halo_rounds(plan, ghosts, findings):
                         f"{order[d][slot] if slot < len(order[d]) else 'dump'}",
                         device=d))
                     continue
+                c0 = int(rcol[d, i])
+                if int(scol[src, i]) != c0:
+                    findings.append(Finding(
+                        "table", f"halo round (delta={delta}, {cls}):"
+                        f" ghost row {g} gathered at source column "
+                        f"{int(scol[src, i])} but scattered at "
+                        f"{c0}", device=d))
+                lo_, hi_ = spans[d].get((g, cls), (0, 0))
+                if c0 < 0 or c0 + wc > plan.ncols \
+                        or not (c0 <= lo_ and hi_ <= c0 + wc):
+                    findings.append(Finding(
+                        "table", f"halo round (delta={delta}, {cls}):"
+                        f" ghost row {g} window [{c0}, {c0 + wc}) "
+                        f"misses its reader span [{lo_}, {hi_}) or "
+                        f"exceeds [0, {plan.ncols})", device=d))
                 delivered[d].setdefault(g, set()).add(cls)
     for d in range(D):
         for g, need in ghosts[d].items():
@@ -689,14 +728,18 @@ def _check_phase_tables(plan, ints, bnds, findings):
 
 
 def _check_sharded_lut(plan, findings):
-    """Each device's LUT chunk must decode its slab row-major: chunk
-    row t (t < count) is the member block whose packed slot is
-    (t % ncols, lo + t // ncols)."""
+    """Each device's decode-table chunk must decode its slab row-major:
+    chunk row t (t < count) is the member block whose packed slot is
+    (t % ncols, lo + t // ncols).  Applies to every table-backed
+    lowering (prefetch_lut, or mma on block-indexed structures)."""
     D = plan.num_shards
     if plan.partition != "storage-rows":
         return
     per = plan.rpd * plan.ncols
-    lut = np.asarray(plan.lut_sharded_host())
+    lut = plan.lut_sharded_host()
+    if lut is None:
+        lut = plan.mma_table_sharded_host()
+    lut = np.asarray(lut)
     if plan._tiling is not None:
         slot = plan._tiling.tile_index
     else:
@@ -760,6 +803,68 @@ def _check_phase_views(plan, findings):
                 "each owned step exactly once", device=d))
 
 
+def _check_flash_hulls(plan, findings):
+    """Flash q/k window hulls.  The gpu-structured flash kernel walks
+    key blocks ``start..end`` of each query row with an in-kernel
+    ``fori_loop``, so correctness needs (a) every block row of the
+    domain to be a *contiguous* span -- a hole would be visited and
+    attended to -- and (b) the row-extents source the lowering consumes
+    to equal the hull re-derived from membership: the host
+    ``row_extents`` table (bound under ``prefetch_lut``) and, for
+    ``mma`` plans, the device digit-basis chain
+    (:func:`repro.core.mma.row_extents_chain`).  ``closed_form``
+    computes the bounds analytically in-kernel; its hull is implied by
+    (a) plus the coverage check, and ``bounding`` walks the full range
+    with where-guards.  Both hull sources must also stay inside the
+    block grid (an out-of-range extent would clamp KV loads onto wrong
+    tiles)."""
+    dom = plan.sched_domain
+    gx, gy = members_host(dom)
+    nbx, nby = dom.bounding_box
+    exp = np.zeros((nby, 2), np.int64)
+    exp[:, 1] = -1
+    for row in range(nby):
+        xs = np.unique(gx[gy == row])
+        if not len(xs):
+            continue
+        exp[row, 0], exp[row, 1] = xs.min(), xs.max()
+        if len(xs) != exp[row, 1] - exp[row, 0] + 1:
+            findings.append(Finding(
+                "hull", f"block row {row} has holes: the flash key "
+                f"loop over [{exp[row, 0]}, {exp[row, 1]}] would "
+                f"attend to non-member tiles"))
+    sources = [("row_extents", plan.row_extents())]
+    if plan.lowering == "mma":
+        import jax
+
+        from repro.core import mma
+        # eager: this check runs inside kernel jit traces
+        with jax.ensure_compile_time_eval():
+            chain = np.asarray(mma.row_extents_chain(plan.domain))
+        sources.append(("mma.row_extents_chain", chain))
+    for name, ext in sources:
+        ext = np.asarray(ext).astype(np.int64)
+        if ext.shape != (nby, 2):
+            findings.append(Finding(
+                "hull", f"{name} has shape {ext.shape}, expected "
+                f"{(nby, 2)}"))
+            continue
+        occ = exp[:, 1] >= exp[:, 0]
+        if np.any((ext[occ, 0] < 0) | (ext[occ, 1] >= nbx)):
+            findings.append(Finding(
+                "hull", f"{name} leaves the {nbx}-wide block grid"))
+        bad = np.nonzero((ext[:, 0] != exp[:, 0])
+                         | (ext[:, 1] != exp[:, 1]))[0]
+        for row in bad[:3]:
+            findings.append(Finding(
+                "hull", f"{name} row {row} = "
+                f"[{ext[row, 0]}, {ext[row, 1]}] but the membership "
+                f"hull is [{exp[row, 0]}, {exp[row, 1]}]"))
+        if len(bad) > 3:
+            findings.append(Finding(
+                "hull", f"... {len(bad)} wrong {name} rows"))
+
+
 # ---------------------------------------------------------------------------
 # entry points
 # ---------------------------------------------------------------------------
@@ -769,8 +874,19 @@ def verify_plan(plan: GridPlan, *, kernel: str = "generic",
     """Run every applicable static check for ``plan`` under the named
     kernel access model (see :data:`ACCESS_MODELS`); returns a
     :class:`Report` (``.ok`` / ``.findings``)."""
+    import jax
+
+    # host-side static analysis even when invoked from inside a kernel's
+    # jit trace (the verify= debug flag): the mma lowering's decode
+    # chains are jnp, and staging them would make every re-derived
+    # value a tracer.
+    with jax.ensure_compile_time_eval():
+        return _verify_plan_host(plan, kernel, checks)
+
+
+def _verify_plan_host(plan, kernel, checks):
     model = ACCESS_MODELS[kernel]
-    all_checks = ("coverage", "race", "table", "bounds", "alias")
+    all_checks = ("coverage", "race", "table", "bounds", "alias", "hull")
     selected = tuple(checks) if checks is not None else all_checks
     findings: List[Finding] = []
     D = num_devices(plan)
@@ -793,6 +909,8 @@ def verify_plan(plan: GridPlan, *, kernel: str = "generic",
         if "alias" in selected and model["alias_reads"]:
             _check_alias(plan, refs_per_device, per_device, model,
                          findings)
+    if "hull" in selected and model.get("hulls"):
+        _check_flash_hulls(plan, findings)
     if "coverage" in selected and _is_sharded(plan) \
             and _phase(plan) is None \
             and plan.partition == "storage-rows" \

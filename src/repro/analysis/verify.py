@@ -132,8 +132,8 @@ def run_sanitizer_smoke(smoke: bool = False, verbose: bool = True) -> list:
     block = 3
     operands = {"embedded": jnp.zeros((24, 24), jnp.float32),
                 "compact": jnp.zeros(lay.array_shape(block), jnp.float32)}
-    grid_modes = ("closed_form",) if smoke \
-        else ("closed_form", "prefetch_lut", "bounding")
+    grid_modes = ("closed_form", "mma") if smoke \
+        else ("closed_form", "prefetch_lut", "bounding", "mma")
     out = []
     for bk in ("gpu-interpret", "tpu-interpret"):
         for storage in ("embedded", "compact"):

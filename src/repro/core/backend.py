@@ -100,6 +100,13 @@ class BackendTarget:
                          no software pipeline: ``resolve_stages``
                          clamps every request back to the synchronous
                          path.
+    prefers_mma:         the target has matrix units (MXU / tensor
+                         cores) that make the ``mma`` digit-basis
+                         decode chains profitable; the autotuner ranks
+                         ``mma`` candidates first on such targets.
+                         Both structures carry the flag (TPUs have the
+                         MXU, GPUs tensor cores); a scalar-only target
+                         would clear it.
     """
 
     name: str
@@ -113,6 +120,7 @@ class BackendTarget:
     memory_space: str
     async_copy: bool
     pipeline_stages: int
+    prefers_mma: bool
 
     # -- variants -----------------------------------------------------------
 
@@ -204,7 +212,8 @@ def _mk(name, kind, interpret):
         # capability flags are per *structure*, not per execution mode:
         # the -interpret variants keep them so the pipelined paths are
         # exercised (and parity-tested) without the hardware.
-        async_copy=tpu, pipeline_stages=2 if tpu else 4)
+        async_copy=tpu, pipeline_stages=2 if tpu else 4,
+        prefers_mma=True)
 
 
 TPU = _mk("tpu", "tpu", False)

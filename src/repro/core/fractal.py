@@ -176,6 +176,12 @@ class FractalSpec:
     def hausdorff(self) -> float:
         return math.log(self.k) / math.log(self.m)
 
+    @property
+    def cache_key(self):
+        """Value identity for :mod:`repro.core.memo`: the mma digit-basis
+        builders memoize per spec geometry, not per instance."""
+        return ("fractal-spec", self.name, self.k, self.m, self.offsets)
+
     def scale_level(self, n: int) -> int:
         r = int(round(math.log(n, self.m)))
         if self.m ** r != n:

@@ -74,7 +74,7 @@ from .domain import (BandDomain, BlockDomain, BoundingBoxDomain,
                      GeneralizedFractalDomain, SierpinskiDomain,
                      TriangularDomain)
 
-LOWERINGS = ("closed_form", "prefetch_lut", "bounding")
+LOWERINGS = ("closed_form", "prefetch_lut", "bounding", "mma")
 _ALIASES = {"compact": "closed_form"}
 
 STORAGES = ("embedded", "compact")
@@ -107,9 +107,9 @@ def normalize_storage(name: str) -> str:
 def xla_schedule(lowering: str) -> str:
     """The XLA-level flash-attention schedule equivalent to a lowering.
 
-    ``closed_form``/``prefetch_lut`` only launch member blocks -- the
-    XLA mirror is the ``triangular`` (compact) schedule; ``bounding``
-    mirrors the ``dense`` masked schedule."""
+    ``closed_form``/``prefetch_lut``/``mma`` only launch member blocks
+    -- the XLA mirror is the ``triangular`` (compact) schedule;
+    ``bounding`` mirrors the ``dense`` masked schedule."""
     return "dense" if normalize_lowering(lowering) == "bounding" else \
         "triangular"
 
@@ -161,8 +161,13 @@ class GridPlan:
     Parameters
     ----------
     domain:      the block domain to enumerate.
-    lowering:    "closed_form" | "prefetch_lut" | "bounding" (or the
-                 legacy alias "compact").
+    lowering:    "closed_form" | "prefetch_lut" | "bounding" | "mma"
+                 (or the legacy alias "compact").  "mma" computes the
+                 lambda decode as mixed-precision ``dot_general``
+                 digit-basis chains (see :mod:`repro.core.mma`): on
+                 block-indexed targets the chain output is bound as the
+                 scalar-prefetch table, on gpu structures the chains
+                 run in-kernel per program.
     batch_dims:  leading grid dimensions iterated outside the domain
                  (e.g. ``(batch * heads,)`` for attention).
     storage:     "embedded" (state arrays are the dense bounding-box
@@ -237,15 +242,30 @@ class GridPlan:
     # -- scalar-prefetch table ---------------------------------------------
 
     @property
+    def _table_backed(self) -> bool:
+        """Whether this plan's decode rides a bound table ref.
+
+        ``prefetch_lut`` always does.  ``mma`` does only on
+        block-indexed (TPU-structured) targets: Mosaic index maps
+        cannot run ``dot_general``, so the chain output is bound as a
+        scalar-prefetch table and read like a LUT; the gpu structure
+        runs the chains in-kernel per program instead."""
+        return self.lowering == "prefetch_lut" or (
+            self.lowering == "mma" and self.target.block_indexed)
+
+    @property
     def num_scalar_prefetch(self) -> int:
-        return 1 if self.lowering == "prefetch_lut" else 0
+        return 1 if self._table_backed else 0
 
     def bound_prefetch(self):
         """The scalar-prefetch operands ``pallas_call`` binds itself, or
         ``None`` when the caller must supply them per call (the sharded
         planner: its tables are per-device shard_map operands, not trace
         constants)."""
-        return (self.lut(),) if self.num_scalar_prefetch else ()
+        if not self.num_scalar_prefetch:
+            return ()
+        return (self.mma_table() if self.lowering == "mma"
+                else self.lut(),)
 
     @staticmethod
     def _split_im_args(args, nsp: int):
@@ -289,6 +309,66 @@ class GridPlan:
         table.setflags(write=False)
         return table
 
+    def mma_table(self) -> jnp.ndarray:
+        """Decode table of the ``mma`` lowering -- the same row/column
+        layout as :meth:`lut_host`, but every lambda / lambda^-1 entry
+        is a :mod:`repro.core.mma` digit-basis ``dot_general`` chain
+        instead of a host integer loop.  On block-indexed targets this
+        is the bound scalar-prefetch operand (index maps read it like a
+        LUT); the verifier re-derives it from ``linear_index`` ground
+        truth, so a corrupted digit-basis matrix surfaces as table
+        findings.  The memoized build runs the chains eagerly
+        (``ensure_compile_time_eval``) so a first call inside a jit
+        trace cannot cache tracers."""
+        return jnp.asarray(self.mma_table_host())
+
+    def mma_table_host(self) -> np.ndarray:
+        """Host numpy copy of :meth:`mma_table` -- what the verifier
+        re-derives against (it runs inside kernel jit traces, where the
+        device array would be a tracer)."""
+        return memo.cached("gridplan-mma-table", self.domain,
+                           (self.storage, self.coarsen), self._mma_table)
+
+    def _mma_table(self) -> np.ndarray:
+        import jax
+
+        with jax.ensure_compile_time_eval():
+            table = np.asarray(self._mma_table_chains())
+        table.setflags(write=False)
+        return table
+
+    def _mma_table_chains(self) -> jnp.ndarray:
+        from . import mma
+        from .compact import NEIGHBOR_OFFSETS8
+        dom = self.sched_domain
+        t = jnp.arange(dom.num_blocks, dtype=jnp.int32)
+        frac = mma.fractal_of(dom)
+        if frac is not None:
+            spec, r = frac
+            bx, by = mma.decode_linear(spec, r, t)
+        else:
+            bx, by = mma.decode_rows(dom, t)
+        if self.storage == "embedded":
+            return jnp.stack([bx, by], axis=-1).astype(jnp.int32)
+        swap = self._tiling is not None and self._tiling.j % 2 == 1
+        if frac is not None:
+            sx, sy = mma.slots_of_linear(spec, r, t, swap=swap)
+        else:
+            # generic near-square layouts have no lambda to accelerate:
+            # slots stay the integer row-major reshape of t.
+            sx, sy = self.layout.slot(bx, by)
+        cols = [bx, by, sx, sy]
+        for dx, dy in NEIGHBOR_OFFSETS8:
+            if frac is not None:
+                nsx, nsy, ok = mma.neighbor_slots(
+                    spec, r, dom, bx, by, dx, dy, swap=swap)
+            else:
+                nsx, nsy, ok = self.layout.neighbor_slot(bx, by, dx, dy)
+            cols += [nsx, nsy, ok.astype(jnp.int32)]
+        table = jnp.stack(cols, axis=-1).astype(jnp.int32)
+        assert table.shape[1] == _LUT_COLS
+        return table
+
     # -- the one shared decode ---------------------------------------------
 
     def _lut_row0(self) -> Optional[np.ndarray]:
@@ -322,14 +402,26 @@ class GridPlan:
         batch = tuple(grid_ids[:nb])
         if self.lowering == "bounding":
             by, bx = grid_ids[nb], grid_ids[nb + 1]
-        elif self.lowering == "prefetch_lut":
+        elif self._table_backed:  # prefetch_lut, or mma on TPU structures
             t = grid_ids[nb]
             lut_ref = prefetch_refs[-1]
             bx = self._lut_read(lut_ref, t, _LUT_BX)
             by = self._lut_read(lut_ref, t, _LUT_BY)
+        elif self.lowering == "mma":  # gpu structure: chains in-kernel
+            bx, by = self._mma_decode(grid_ids[nb])
         else:  # closed_form
             bx, by = self.sched_domain.block_coords(grid_ids[nb])
         return batch, bx, by
+
+    def _mma_decode(self, t):
+        """Linear step -> scheduled (bx, by) via the digit-basis matmul
+        chains (fractal domains) or the row-comparison chain (generic
+        row-major domains)."""
+        from . import mma
+        frac = mma.fractal_of(self.sched_domain)
+        if frac is not None:
+            return mma.decode_linear(frac[0], frac[1], t)
+        return mma.decode_rows(self.sched_domain, t)
 
     def _place_coords(self, bx, by, prefetch_refs=()):
         """The (bx, by) an operand's ``place`` callback receives; the
@@ -414,11 +506,22 @@ class GridPlan:
             _, bx, by = self._decode(grid_ids, refs)
             bx, by = self._place_coords(bx, by, refs)
             return by, bx
-        if self.lowering == "prefetch_lut":
+        if self._table_backed:
             t = grid_ids[len(self.batch_dims)]
             lut_ref = refs[-1]
             return (self._lut_read(lut_ref, t, _LUT_SY),
                     self._lut_read(lut_ref, t, _LUT_SX))
+        if self.lowering == "mma":
+            from . import mma
+            frac = mma.fractal_of(self.sched_domain)
+            if frac is not None:
+                # the compact enumeration is lambda-linear: the own slot
+                # comes straight from the step id, one digit contraction
+                swap = self._tiling is not None and self._tiling.j % 2
+                sx, sy = mma.slots_of_linear(
+                    frac[0], frac[1], grid_ids[len(self.batch_dims)],
+                    swap=bool(swap))
+                return sy, sx
         _, bx, by = self._decode(grid_ids, refs)
         if self._tiling is not None:
             tx, ty = self._tiling.tile_index(bx, by)
@@ -441,12 +544,21 @@ class GridPlan:
             bx, by = self._place_coords(bx, by, refs)
             return (jnp.clip(by + dy, 0, nby - 1),
                     jnp.clip(bx + dx, 0, nbx - 1))
-        if self.lowering == "prefetch_lut":
+        if self._table_backed:
             t = grid_ids[len(self.batch_dims)]
             lut_ref = refs[-1]
             return (self._lut_read(lut_ref, t, _LUT_NBR + 3 * j + 1),
                     self._lut_read(lut_ref, t, _LUT_NBR + 3 * j))
         _, bx, by = self._decode(grid_ids, refs)
+        if self.lowering == "mma":
+            from . import mma
+            frac = mma.fractal_of(self.sched_domain)
+            if frac is not None:
+                swap = self._tiling is not None and self._tiling.j % 2
+                sx, sy, _ok = mma.neighbor_slots(
+                    frac[0], frac[1], self.sched_domain, bx, by, dx, dy,
+                    swap=bool(swap))
+                return sy, sx
         if self._tiling is not None:
             tx, ty, _ok = self._tiling.neighbor_tile(bx, by, dx, dy)
             return ty, tx

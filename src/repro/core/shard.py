@@ -88,6 +88,16 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _widen(spans: dict, key, lo: int, hi: int) -> None:
+    """Grow ``spans[key]`` to cover the half-open column span
+    [lo, hi)."""
+    if key in spans:
+        plo, phi = spans[key]
+        spans[key] = (min(plo, lo), max(phi, hi))
+    else:
+        spans[key] = (lo, hi)
+
+
 class HaloPlan:
     """Host-resolved ghost-row exchange for a storage-row partition.
 
@@ -104,8 +114,13 @@ class HaloPlan:
     ships only that strip instead of its full ``row_unit`` height.
     ``dy = 0`` readers (and packed supertiles, whose cell rows are not
     embedded-ordered -- ``plan.tile_map() is not None``) force the
-    full row.  Unshipped strip cells stay zero and are never read by a
-    valid step.  The partition of each device's steps into *interior*
+    full row.  Orthogonally, each entry ships only the *occupied
+    column window*: the span of slot columns its receiver's readers
+    actually resolve (``col_span``), widened to the round's max width
+    ``wcols`` and clamped into ``[0, ncols)`` so every payload in a
+    round has one static shape.  Unshipped strip/column cells stay
+    zero and are never read by a valid step.  The partition of each
+    device's steps into *interior*
     (all 8 neighbour rows local) and *boundary* (any ghost neighbour)
     -- ``int_steps`` / ``bnd_steps`` -- is what lets a driver overlap
     the exchange with interior compute (:meth:`ShardedPlan.phase_view`).
@@ -115,6 +130,7 @@ class HaloPlan:
         D, rpd, nrows = plan.num_shards, plan.rpd, plan.nrows
         self.ghost_rows = [[] for _ in range(D)]
         self.row_class = [dict() for _ in range(D)]
+        self.col_span = [dict() for _ in range(D)]  # (g, cls) -> (lo, hi)
         self.int_steps = None
         self.bnd_steps = None
         if with_halo:
@@ -133,17 +149,26 @@ class HaloPlan:
                 sel = (rows >= lo) & (rows < hi)
                 nb, mine = nbrs[sel], own[sel]
                 cls = self.row_class[d]
+                span = self.col_span[d]
                 for j, (dx, dy) in enumerate(NEIGHBOR_OFFSETS8):
-                    ok = nb[:, j, 2] == 1
-                    gr = nb[:, j, 1][ok]
-                    gr = gr[(gr < lo) | (gr >= hi)]
+                    rem = (nb[:, j, 2] == 1) \
+                        & ((nb[:, j, 1] < lo) | (nb[:, j, 1] >= hi))
+                    gr, gc = nb[:, j, 1][rem], nb[:, j, 0][rem]
                     c = "top" if strips and dy == 1 else \
                         "bot" if strips and dy == -1 else "full"
                     for g in np.unique(gr):
+                        cols = gc[gr == g]
                         cls.setdefault(int(g), set()).add(c)
+                        _widen(span, (int(g), c),
+                               int(cols.min()), int(cols.max()) + 1)
                 for g, s in cls.items():
                     if "full" in s:
+                        merged = [span.pop((g, c)) for c in s
+                                  if (g, c) in span]
                         cls[g] = {"full"}
+                        span[(g, "full")] = (
+                            min(x for x, _ in merged),
+                            max(y for _, y in merged))
                 self.ghost_rows[d] = sorted(cls)
                 remote = (nb[..., 2] == 1) \
                     & ((nb[..., 1] < lo) | (nb[..., 1] >= hi))
@@ -165,7 +190,8 @@ class HaloPlan:
         self.ghost_map = gmap
         # ppermute rounds: one per (device offset, strip class) with
         # any traffic
-        self.rounds = []   # [(delta, cls, send_idx (D, m), recv (D, m))]
+        self.rounds = []   # [(delta, cls, send (D, m), recv (D, m),
+        #                     scol (D, m), rcol (D, m), wcols)]
         for delta in range(1, D):
             for cls in ("full", "top", "bot"):
                 needs = [[g for g in self.ghost_rows[d]
@@ -175,19 +201,32 @@ class HaloPlan:
                 m = max(len(x) for x in needs)
                 if m == 0:
                     continue
+                wc = max(hi_ - lo_ for d in range(D) for g in needs[d]
+                         for lo_, hi_ in (self.col_span[d][(g, cls)],))
                 send = np.zeros((D, m), np.int32)
                 recv = np.full((D, m), self.h_max, np.int32)  # pad -> dump
+                scol = np.zeros((D, m), np.int32)
+                rcol = np.zeros((D, m), np.int32)
                 for d in range(D):
                     for i, g in enumerate(needs[(d + delta) % D]):
                         send[d, i] = g - d * rpd  # local row at source
+                        sp = self.col_span[(d + delta) % D][(g, cls)]
+                        scol[d, i] = min(sp[0], plan.ncols - wc)
                     for i, g in enumerate(needs[d]):
                         recv[d, i] = self.ghost_rows[d].index(g)
-                self.rounds.append((delta, cls, send, recv))
+                        sp = self.col_span[d][(g, cls)]
+                        rcol[d, i] = min(sp[0], plan.ncols - wc)
+                self.rounds.append(
+                    (delta, cls, send, recv, scol, rcol, wc))
 
     def send_recv_host(self):
-        """((send_0, recv_0), ...) host tables, one pair per round;
-        drivers pass them into shard_map sharded along the mesh axis."""
-        return tuple((s, r) for _, _, s, r in self.rounds)
+        """((send, recv, scol, rcol), ...) host tables, one 4-tuple
+        per round; drivers pass them into shard_map sharded along the
+        mesh axis.  ``scol``/``rcol`` are the clamped first slot
+        column of each entry's shipped window (source / receiver side;
+        equal by construction -- both resolve the receiver's span)."""
+        return tuple((s, r, sc, rc)
+                     for _, _, s, r, sc, rc, _ in self.rounds)
 
     def _strip(self, cls: str, RU: int, h: int):
         """(row offset, height) of one class's strip within a row."""
@@ -202,23 +241,35 @@ class HaloPlan:
         """Inside shard_map: run every ppermute round and return the
         ghost block ((h_max + 1), RU, W) = exchanged ghost rows ++ a
         zero-init dump row.  ``h`` is the strip height in cells (the
-        launch fuse depth); ``None`` ships full rows.  Independent of
-        the local compute, so a driver can launch interior work while
-        the collective is in flight and :meth:`cat` afterwards."""
+        launch fuse depth); ``None`` ships full rows.  Each entry
+        ships only its ``wcols``-slot-column window (gathered at the
+        sender's ``scol``, scattered at the receiver's ``rcol``); the
+        rest of the ghost row stays zero.  Independent of the local
+        compute, so a driver can launch interior work while the
+        collective is in flight and :meth:`cat` afterwards."""
         rpd, RU = plan.rpd, plan.row_unit
         h = RU if h is None else min(int(h), RU)
         W = local.shape[-1]
+        tw = W // plan.ncols  # cell columns per slot column
         rows = local.reshape(rpd, RU, W)
         ghost = jnp.zeros((self.h_max + 1, RU, W), local.dtype)
         D = plan.num_shards
-        for (delta, cls, _, _), (send, recv) in zip(self.rounds,
-                                                    send_recv):
+        for (delta, cls, *_, wc), (send, recv, scol, rcol) in zip(
+                self.rounds, send_recv):
             off, nr = self._strip(cls, RU, h)
-            payload = rows[send.reshape(-1), off:off + nr]
+            base = rows[send.reshape(-1), off:off + nr]  # (m, nr, W)
+            cidx = (scol.reshape(-1)[:, None] * tw
+                    + jnp.arange(wc * tw))               # (m, wc*tw)
+            payload = jnp.take_along_axis(base, cidx[:, None, :],
+                                          axis=2)
             got = jax.lax.ppermute(
                 payload, plan.axis,
                 [(s, (s + delta) % D) for s in range(D)])
-            ghost = ghost.at[recv.reshape(-1), off:off + nr].set(got)
+            ri = recv.reshape(-1)
+            rr = off + jnp.arange(nr)
+            cc = rcol.reshape(-1)[:, None] * tw + jnp.arange(wc * tw)
+            ghost = ghost.at[ri[:, None, None], rr[None, :, None],
+                             cc[:, None, :]].set(got)
         return ghost
 
     def cat(self, plan: "ShardedPlan", local: jnp.ndarray,
@@ -242,24 +293,30 @@ class HaloPlan:
                         h: Optional[int] = None,
                         itemsize: int = 4) -> dict:
         """Payload bytes one exchange moves across the whole mesh:
-        ``strips`` (what :meth:`exchange` ships at strip height ``h``,
-        padding included) vs ``full_rows`` (the pre-trim scheme: every
-        ghost row at full row_unit height)."""
+        ``trimmed`` (what :meth:`exchange` ships -- strip height ``h``
+        x the per-round occupied column window, padding included) vs
+        ``strips`` (strip-trimmed but full-width rows) vs
+        ``full_rows`` (the pre-trim scheme: every ghost row at full
+        row_unit height and width)."""
         plan.bind_block(block)
         RU = plan.row_unit
         tw = plan.supertile_shape((block, block))[1]
         W = plan.ncols * tw
         h = RU if h is None else min(int(h), RU)
         D, rpd = plan.num_shards, plan.rpd
+        trimmed = sum(D * s.shape[1] * self._strip(cls, RU, h)[1]
+                      * wc * tw * itemsize
+                      for _, cls, s, _, _, _, wc in self.rounds)
         strips = sum(D * s.shape[1] * self._strip(cls, RU, h)[1] * W
-                     * itemsize for _, cls, s, _ in self.rounds)
+                     * itemsize for _, cls, s, *_ in self.rounds)
         full = 0
         for delta in range(1, D):
             m = max(len([g for g in self.ghost_rows[d]
                          if g // rpd == (d - delta) % D])
                     for d in range(D))
             full += D * m * RU * W * itemsize
-        return {"strips": strips, "full_rows": full}
+        return {"trimmed": trimmed, "strips": strips,
+                "full_rows": full}
 
 
 class ShardedPlan(GridPlan):
@@ -455,6 +512,51 @@ class ShardedPlan(GridPlan):
         out.setflags(write=False)
         return out
 
+    def mma_table_sharded(self) -> Optional[jnp.ndarray]:
+        """(D * steps_per_shard, C) i32 decode table of the table-backed
+        ``mma`` lowering: the device-computed canonical chain table
+        (:meth:`GridPlan.mma_table`), permuted/chunked/padded into the
+        per-device enumeration order by a host-built gather index that
+        replicates :meth:`_lut_sharded_host` exactly -- so the chunks
+        carry chain-derived entries in LUT layout.  ``None`` when this
+        plan binds no mma table (other lowerings, or gpu structures
+        which run the chains in-kernel)."""
+        tbl = self.mma_table_sharded_host()
+        return None if tbl is None else jnp.asarray(tbl)
+
+    def mma_table_sharded_host(self) -> Optional[np.ndarray]:
+        """Host numpy copy of :meth:`mma_table_sharded` (the verifier
+        runs inside kernel jit traces, where the device gather would be
+        a tracer)."""
+        if not (self.lowering == "mma" and self._table_backed):
+            return None
+        idx = memo.cached(
+            "shard-mma-index", self.domain,
+            (self.storage, self.coarsen, self.num_shards, self.partition),
+            self._mma_shard_index)
+        return GridPlan.mma_table_host(self)[idx]
+
+    def _mma_shard_index(self) -> np.ndarray:
+        n = self.sched_domain.num_blocks
+        order = np.arange(n, dtype=np.int64)
+        if self.partition == "storage-rows":
+            if self._tiling is not None:
+                slots = self._tiling.tiles_host()
+            else:
+                slots = self.layout.slots_host()
+            order = np.argsort(
+                slots[:, 1].astype(np.int64) * self.ncols + slots[:, 0],
+                kind="stable")
+        per = self.steps_per_shard
+        out = np.zeros((self.num_shards, per), np.int64)
+        for d in range(self.num_shards):
+            lo, c = int(self._lo[d]), int(self._count[d])
+            out[d] = order[lo] if c else order[0]
+            out[d, :c] = order[lo:lo + c]
+        out = out.reshape(self.num_shards * per)
+        out.setflags(write=False)
+        return out
+
     # -- interior/boundary phase views ---------------------------------------
 
     def phase_widths(self) -> Tuple[int, int]:
@@ -528,7 +630,7 @@ class ShardedPlan(GridPlan):
 
     @property
     def num_scalar_prefetch(self) -> int:
-        base = 2 if self.lowering == "prefetch_lut" else 1
+        base = 2 if self._table_backed else 1
         return base + (1 if self.phase is not None else 0)
 
     def bound_prefetch(self):
@@ -551,15 +653,26 @@ class ShardedPlan(GridPlan):
         coords, the sharded closed-form decode (lambda on the orthotope
         coordinate; linear-order block_coords for block-linear
         layouts)."""
+        mma_lib = None
+        if self.lowering == "mma":
+            from . import mma as mma_lib
         if self._tiling is not None:
             t = self._tiling
             wx, wy = (col, row) if t.j % 2 == 0 else (row, col)
+            if mma_lib is not None:
+                return mma_lib.decode_orthotope(t.spec, t.coarse.r_b,
+                                                wx, wy)
             return t.spec.lambda_map(wx, wy, t.coarse.r_b)
         spec = self.layout._fractal_spec()
         if spec is not None:
+            if mma_lib is not None:
+                return mma_lib.decode_orthotope(spec, self.domain.r_b,
+                                                col, row)
             return spec.lambda_map(col, row, self.domain.r_b)
         i = jnp.clip(row * self.ncols + col, 0,
                      self.sched_domain.num_blocks - 1)
+        if mma_lib is not None:
+            return mma_lib.decode_rows(self.sched_domain, i)
         return self.sched_domain.block_coords(i)
 
     def _storage_row(self, bx, by):
@@ -578,7 +691,7 @@ class ShardedPlan(GridPlan):
                 by = by + sref[SHARD_ROWLO]
             return batch, bx, by
         t = self._phase_step(grid_ids[nb], prefetch_refs)
-        if self.lowering == "prefetch_lut":
+        if self._table_backed:  # prefetch_lut, or mma on TPU structures
             lut_ref = prefetch_refs[1]
             return batch, lut_ref[t, 0], lut_ref[t, 1]
         if self.partition == "storage-rows":
@@ -593,6 +706,8 @@ class ShardedPlan(GridPlan):
         i = jnp.clip(sref[SHARD_LO]
                      + jnp.minimum(t, sref[SHARD_COUNT] - 1),
                      0, self.sched_domain.num_blocks - 1)
+        if self.lowering == "mma":  # gpu structure: chains in-kernel
+            return batch, *self._mma_decode(i)
         return batch, *self.sched_domain.block_coords(i)
 
     def _place_coords(self, bx, by, prefetch_refs=()):
@@ -653,14 +768,23 @@ class ShardedPlan(GridPlan):
             return super().neighbor_index(j, grid_ids, refs)
         dx, dy = NEIGHBOR_OFFSETS8[j]
         sref = refs[0]
-        if self.lowering == "prefetch_lut":
+        if self._table_backed:
             t = self._phase_step(grid_ids[len(self.batch_dims)], refs)
             lut_ref = refs[1]
             nsx = lut_ref[t, _LUT_NBR + 3 * j]
             nsy = lut_ref[t, _LUT_NBR + 3 * j + 1]
         else:
             _, bx, by = self._decode(grid_ids, refs)
-            if self._tiling is not None:
+            frac = None
+            if self.lowering == "mma":
+                from . import mma
+                frac = mma.fractal_of(self.sched_domain)
+            if frac is not None:
+                swap = self._tiling is not None and self._tiling.j % 2
+                nsx, nsy, _ok = mma.neighbor_slots(
+                    frac[0], frac[1], self.sched_domain, bx, by, dx, dy,
+                    swap=bool(swap))
+            elif self._tiling is not None:
                 nsx, nsy, _ok = self._tiling.neighbor_tile(bx, by, dx, dy)
             else:
                 nsx, nsy, _ok = self.layout.neighbor_slot(bx, by, dx, dy)
@@ -690,12 +814,15 @@ class ShardedPlan(GridPlan):
 
 def device_tables(plan: ShardedPlan):
     """(shard_table, lut_tuple) device arrays for a driver's shard_map:
-    the (D, L) shard table plus, under prefetch_lut, the per-device
-    decode LUT -- both sharded ``P(axis, None)`` on their leading axis
-    so each device receives its own row/chunk.  One builder shared by
+    the (D, L) shard table plus, under the table-backed lowerings
+    (prefetch_lut, or mma on TPU structures), the per-device decode
+    table -- both sharded ``P(axis, None)`` on their leading axis so
+    each device receives its own row/chunk.  One builder shared by
     every sharded kernel driver so the prefetch-operand plumbing cannot
     drift between kernels."""
     tbl = jnp.asarray(plan.shard_table_host())
     lut = plan.lut_sharded_host()
-    luts = (jnp.asarray(lut),) if lut is not None else ()
-    return tbl, luts
+    if lut is not None:
+        return tbl, (jnp.asarray(lut),)
+    mma_tbl = plan.mma_table_sharded()
+    return tbl, ((mma_tbl,) if mma_tbl is not None else ())

@@ -376,11 +376,24 @@ def _coarsen_axis(fractal: str, n: int, block: int,
     return out or [1]
 
 
+def _lowering_axis(target=None) -> tuple:
+    """:data:`~repro.core.plan.LOWERINGS`, with ``mma`` hoisted to the
+    front on targets whose matrix units make the digit-basis decode
+    profitable (``prefers_mma``): candidate order is measurement order,
+    so the likely winner warms the jit caches first and the sharded
+    warm-start explores its one-knob neighbourhood."""
+    from . import backend as backend_lib
+    from .plan import LOWERINGS
+    target = backend_lib.resolve(target)
+    if target.prefers_mma:
+        return ("mma",) + tuple(lo for lo in LOWERINGS if lo != "mma")
+    return tuple(LOWERINGS)
+
+
 def ca_candidates(fractal: str, n: int, block: int, *,
                   storages=("embedded", "compact"), max_fuse: int = 8,
                   max_coarsen: int = 4, target=None):
     from . import backend as backend_lib
-    from .plan import LOWERINGS
     target = backend_lib.resolve(target)
     # pipelining depth is a real axis where the emission can use it:
     # the TPU structure's DMA double buffers, or a compiled gpu's
@@ -388,7 +401,7 @@ def ca_candidates(fractal: str, n: int, block: int, *,
     stages_axis = (1, 2) if target.block_indexed \
         or (target.kind == "gpu" and not target.interpret) else (1,)
     for storage in storages:
-        for lowering in LOWERINGS:
+        for lowering in _lowering_axis(target):
             for coarsen in _coarsen_axis(fractal, n, block, max_coarsen):
                 for fuse in _fuse_axis(block, coarsen, max_fuse):
                     for stages in stages_axis:
@@ -478,10 +491,9 @@ def autotune_ca(*, fractal: str = "sierpinski-gasket", n: int = 256,
 
 def write_candidates(fractal: str, n: int, block: int, *,
                      storages=("embedded", "compact"),
-                     max_coarsen: int = 4):
-    from .plan import LOWERINGS
+                     max_coarsen: int = 4, target=None):
     for storage in storages:
-        for lowering in LOWERINGS:
+        for lowering in _lowering_axis(target):
             for coarsen in _coarsen_axis(fractal, n, block, max_coarsen):
                 yield {"lowering": lowering, "storage": storage,
                        "coarsen": coarsen}
@@ -536,7 +548,7 @@ def autotune_write(*, fractal: str = "sierpinski-gasket", n: int = 256,
     params = shard_params(base, mesh, shard_axis)
     seed = best("write", base, cache=cache) if mesh is not None else None
     cands = write_candidates(fractal, n, block, storages=storages,
-                             max_coarsen=max_coarsen)
+                             max_coarsen=max_coarsen, target=backend)
     return autotune("write", params, cands, build, cache=cache,
                     force=force, verbose=verbose, seed_config=seed,
                     verify=vfy)
@@ -559,11 +571,10 @@ def flash_candidates(sq: int, sk: int, *, blocks=ALL_FLASH_BLOCKS,
     name, or None (= the process default -- on a CUDA machine the gpu
     axes appear without asking)."""
     from . import backend as backend_lib
-    from .plan import LOWERINGS
     target = backend_lib.resolve(target)
     gpu = target.kind == "gpu"
     compiled = gpu and not target.interpret
-    for lowering in LOWERINGS:
+    for lowering in _lowering_axis(target):
         for b in blocks:
             if b <= min(sq, sk) and sq % b == 0 and sk % b == 0:
                 base = {"lowering": lowering, "block_q": b, "block_k": b}

@@ -13,7 +13,8 @@ the "order-m equation" map of related work [18]) or through the
 scalar-prefetch lookup table, both emitted by the shared
 :class:`~repro.core.plan.GridPlan` engine.  ``grid_mode`` selects the
 lowering: ``closed_form`` (alias ``compact``) | ``prefetch_lut`` |
-``bounding``.
+``bounding`` | ``mma`` (digit-basis matmul decode on the MXU / tensor
+cores; the gpu structure consumes a device-built row-extents operand).
 
 Grid layout: ``(batch*heads, T)``; the compact enumerations are
 row-major in q, so all k-steps of one q row are consecutive: the online
@@ -164,7 +165,10 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
     carries (parallel grids cannot persist scratch across steps).  The
     lowering picks the extent source: ``closed_form`` computes the row
     bounds inline, ``prefetch_lut`` reads the host-built row-extents
-    table as an HBM operand indexed by the program id, ``bounding``
+    table as an HBM operand indexed by the program id, ``mma`` reads an
+    extents operand produced on device by the digit-basis matmul chain
+    (:func:`repro.core.mma.row_extents_chain`, bit-identical to the
+    host table), ``bounding``
     walks the full key range and where-guards non-member tiles --
     visiting exactly the tiles (in exactly the order) the block-indexed
     structure visits, so results are bit-identical per lowering.
@@ -180,12 +184,12 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
     discarded unread.
 
     Returns ``call(*tables, q, k, v[, pos])`` where ``tables`` is the
-    row-extents operand under ``prefetch_lut`` plus the per-device
-    shard-table row when ``sharded`` (global query row = local row +
-    ``tbl[SHARD_ROWLO]``)."""
+    row-extents operand under ``prefetch_lut``/``mma`` plus the
+    per-device shard-table row when ``sharded`` (global query row =
+    local row + ``tbl[SHARD_ROWLO]``)."""
     from repro.core.shard import SHARD_ROWLO
 
-    n_ext = 1 if lowering == "prefetch_lut" else 0
+    n_ext = 1 if lowering in ("prefetch_lut", "mma") else 0
     n_tbl = 1 if sharded else 0
     rows = rows_local if rows_local is not None else m_q
     kv_blocks = m_k - s0
@@ -205,7 +209,7 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
         qb = pl.program_id(1)
         if sharded:
             qb = qb + tbl_ref[SHARD_ROWLO]
-        if lowering == "prefetch_lut":
+        if lowering in ("prefetch_lut", "mma"):
             start, end = ext_ref[qb, 0], ext_ref[qb, 1]
         elif lowering == "bounding":
             start, end = 0 * qb, 0 * qb + (m_k - 1)
@@ -400,8 +404,13 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
 
     if not target.block_indexed:
         lowering = plan.lowering
-        extents = plan.row_extents() if lowering == "prefetch_lut" \
-            else None
+        if lowering == "prefetch_lut":
+            extents = plan.row_extents()
+        elif lowering == "mma":
+            from repro.core import mma
+            extents = mma.row_extents_chain(domain)
+        else:
+            extents = None
         call = _gpu_flash_call(
             target=target, domain=domain, lowering=lowering, b=b, h=h,
             group=group, m_q=m_q, m_k=m_k, wb=wb, off=off,
@@ -462,8 +471,8 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
         tbl, luts = device_tables(plan)
     else:
         # gpu structure reads only the shard-table row in-kernel (the
-        # prefetch_lut extents table is bound inside the call), so skip
-        # building/transferring the chunked decode LUT entirely
+        # prefetch_lut/mma extents table is bound inside the call), so
+        # skip building/transferring the chunked decode LUT entirely
         tbl, luts = jnp.asarray(plan.shard_table_host()), ()
     qkv_specs = (P(None, None, axis, None), P(None, None, None, None),
                  P(None, None, None, None))
@@ -495,6 +504,8 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     grid_mode: "closed_form" (alias "compact": the paper's block-space
                map) | "prefetch_lut" (scalar-prefetch table decode) |
                "bounding" (baseline full grid + run-time discard) |
+               "mma" (digit-basis matmul decode on the matrix units;
+               see :mod:`repro.core.mma`) |
                "auto" (resolve the tuned lowering -- and tuned block
                geometry, when block_q/block_k are left at "auto" --
                from the :mod:`~repro.core.tune` cache)

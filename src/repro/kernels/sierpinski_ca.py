@@ -452,9 +452,10 @@ def _ca_run_sharded_impl(state, stale_buf, *, steps, fuse, rule, alpha,
 
     if storage == "compact":
         halo = plan.halo
-        sr = tuple((jnp.asarray(s), jnp.asarray(r))
-                   for s, r in halo.send_recv_host())
-        sr_specs = tuple((P(axis, None), P(axis, None)) for _ in sr)
+        sr = tuple(tuple(jnp.asarray(t) for t in tabs)
+                   for tabs in halo.send_recv_host())
+        sr_specs = tuple(tuple(P(axis, None) for _ in tabs)
+                         for tabs in sr)
         a = plan.pad_rows(state, block)
         b = plan.pad_rows(stale_buf, block)
         # halo/compute overlap: with pipelining on and a step-indexed
@@ -582,7 +583,9 @@ def ca_run(state: jnp.ndarray, stale_buf: jnp.ndarray, steps: int, *,
     ``mesh=`` (a ``jax.sharding.Mesh``) shards the run over
     ``shard_axis``: compact state splits into orthotope row slabs
     (per-device memory O(n^H / D) + halo) with a lambda^-1-resolved
-    ppermute ghost exchange between launches; embedded state stays
+    ppermute ghost exchange between launches (trimmed to the fuse-deep
+    strip and the occupied column window of each ghost row; see
+    :class:`repro.core.shard.HaloPlan`); embedded state stays
     replicated and devices psum their disjoint block shares.  Both are
     bit-identical to the single-device run.
 

@@ -377,6 +377,7 @@ def sierpinski_write(m: jnp.ndarray, value: float = 1.0, *,
     """Write ``value`` to every fractal cell of the (n, n) state.
 
     grid_mode: closed_form (alias compact) | prefetch_lut | bounding |
+    mma (digit-basis matmul decode, :mod:`repro.core.mma`) |
     auto (tune-cache lookup); fractal: any registered FractalSpec name;
     storage: embedded (m is the dense n x n array) | compact (m is the
     packed orthotope array, pass n= or domain=); coarsen: superblock

@@ -105,13 +105,14 @@ class Server:
     def _rungs(cfg: ModelConfig) -> list:
         """Fallback configs, as-configured first: blockspace decode
         degrades to the XLA decode path, an exotic attention lowering
-        (compact / prefetch_lut) degrades to the inline closed form."""
+        (compact / prefetch_lut / mma) degrades to the inline closed
+        form."""
         top = {"decode_kernel": cfg.attn_decode_kernel,
                "grid_lowering": cfg.grid_lowering}
         rungs = [top]
         if cfg.attn_decode_kernel == "blockspace":
             rungs.append({**top, "decode_kernel": "xla"})
-        if cfg.grid_lowering in ("compact", "prefetch_lut"):
+        if cfg.grid_lowering in ("compact", "prefetch_lut", "mma"):
             rungs.append({"decode_kernel": "xla",
                           "grid_lowering": "closed_form"})
         return rungs
@@ -363,7 +364,7 @@ def main():
                          "seed -- the serving smoke CI runs")
     ap.add_argument("--grid-lowering", default="",
                     choices=("", "closed_form", "prefetch_lut", "bounding",
-                             "compact"),
+                             "mma", "compact"),
                     help="GridPlan lowering for the attention block "
                          "domain (default: the arch's attn_schedule)")
     ap.add_argument("--backend", default="",

@@ -250,7 +250,7 @@ def main():
                     help="use the arch's reduced smoke config")
     ap.add_argument("--grid-lowering", default="",
                     choices=("", "closed_form", "prefetch_lut", "bounding",
-                             "compact"),
+                             "mma", "compact"),
                     help="GridPlan lowering for the attention block "
                          "domain (default: the arch's attn_schedule)")
     ap.add_argument("--mesh", default="",

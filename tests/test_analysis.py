@@ -56,7 +56,7 @@ def test_report_json_roundtrip():
     blob = json.loads(json.dumps(report.to_json()))
     assert blob["ok"] and blob["findings"] == []
     assert set(blob["checks"]) == {"coverage", "race", "table", "bounds",
-                                   "alias"}
+                                   "alias", "hull"}
 
 
 def test_verify_or_raise_is_value_error():
@@ -226,6 +226,36 @@ def test_sharded_plans_clean_and_phase_views_checked():
         for halo in (True, False):
             report = verify_plan(_sharded(d=d, halo=halo), kernel="ca")
             assert report.ok, [str(f) for f in report.findings]
+
+
+def test_corrupt_mma_basis_flagged(monkeypatch):
+    """A corrupted digit-basis matrix must not survive verification:
+    the mma decode table is re-derived from the integer ground truth,
+    so a mis-weighted digit shows up as a table finding."""
+    from repro.core import memo, mma
+    orig = mma.coords_basis
+
+    def corrupted(spec, r):
+        b = np.array(orig(spec, r))
+        b[0, 1, 0] += 1.0            # mis-weight digit 1 at level 1
+        return b
+
+    memo.clear()                     # drop any clean cached tables
+    monkeypatch.setattr(mma, "coords_basis", corrupted)
+    try:
+        plan = _plan("mma", "embedded", backend="tpu-interpret")
+        assert "table" in _checks(plan)
+    finally:
+        memo.clear()                 # drop the corrupted tables too
+
+
+def test_corrupt_flash_hull_flagged():
+    from repro.core.domain import TriangularDomain
+    plan = GridPlan(TriangularDomain(8), "prefetch_lut")
+    ext = np.array(plan.row_extents())
+    ext[0, 1] += 1                   # widen row 0 past its membership
+    plan.row_extents = lambda: ext
+    assert "hull" in _checks(plan, kernel="flash")
 
 
 # ---------------------------------------------------------------------------

@@ -2,13 +2,23 @@
 
 Per instructions: sweep shapes/dtypes and assert_allclose vs the
 pure-jnp oracle for every kernel.
+
+``REPRO_GRID_MODE`` (comma-separated lowering names) overrides the
+default grid-mode sweep -- CI uses it to re-run the whole parity suite
+under a single lowering (e.g. ``REPRO_GRID_MODE=mma``).
 """
+import os
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import fractal as F
 from repro.kernels import ops, ref
+
+GRID_MODES = (os.environ["REPRO_GRID_MODE"].split(",")
+              if os.environ.get("REPRO_GRID_MODE")
+              else ["compact", "bounding"])
 
 RNG = np.random.default_rng(0)
 
@@ -28,7 +38,7 @@ def _fractal_state(n, dtype, binary=False):
 
 @pytest.mark.parametrize("n,block", [(8, 2), (16, 4), (64, 16), (64, 64),
                                      (256, 32), (128, 8)])
-@pytest.mark.parametrize("grid_mode", ["compact", "bounding"])
+@pytest.mark.parametrize("grid_mode", GRID_MODES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
 def test_sierpinski_write(n, block, grid_mode, dtype):
     m = _fractal_state(n, dtype)
@@ -58,7 +68,7 @@ def test_write_touches_exactly_the_fractal():
 
 @pytest.mark.parametrize("n,block", [(16, 4), (32, 8), (64, 16), (64, 32)])
 @pytest.mark.parametrize("rule", ["parity", "diffusion"])
-@pytest.mark.parametrize("grid_mode", ["compact", "bounding"])
+@pytest.mark.parametrize("grid_mode", GRID_MODES)
 def test_ca_step(n, block, rule, grid_mode):
     s = _fractal_state(n, jnp.float32, binary=(rule == "parity"))
     got = ops.ca_step(s, jnp.zeros_like(s), rule=rule, block=block,
@@ -114,7 +124,7 @@ def _qkv(b, h, hkv, sq, sk, d, dtype):
     (1, 8, 1, 256, 64, 128),   # MQA
     (2, 2, 2, 128, 128, 64),
 ])
-@pytest.mark.parametrize("grid_mode", ["compact", "bounding"])
+@pytest.mark.parametrize("grid_mode", GRID_MODES)
 def test_flash_causal(b, h, hkv, s, d, bq, grid_mode):
     q, k, v = _qkv(b, h, hkv, s, s, d, jnp.float32)
     got = ops.flash_attention(q, k, v, kind="causal", block_q=bq,
@@ -125,7 +135,7 @@ def test_flash_causal(b, h, hkv, s, d, bq, grid_mode):
 
 
 @pytest.mark.parametrize("window", [64, 128, 256])
-@pytest.mark.parametrize("grid_mode", ["compact", "bounding"])
+@pytest.mark.parametrize("grid_mode", GRID_MODES)
 def test_flash_local(window, grid_mode):
     q, k, v = _qkv(1, 2, 2, 512, 512, 32, jnp.float32)
     got = ops.flash_attention(q, k, v, kind="local", window=window,

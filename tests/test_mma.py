@@ -1,0 +1,106 @@
+"""The ``mma`` lowering's digit-basis matmul decode chains
+(:mod:`repro.core.mma`): mixed-precision exactness against the integer
+closed forms, the asserted f32-accumulation bound, and kernel-level
+parity on both interpret targets."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fractal as F
+from repro.core import mma
+
+from hypothesis_compat import given, settings, st
+
+SPECS = (F.SIERPINSKI, F.CARPET, F.VICSEK)
+#: deepest level per spec whose volume k^r and extent m^r both stay
+#: under DIGIT_BOUND -- the exactness envelope the chains assert
+MAX_R = {s.name: max(r for r in range(1, 40)
+                     if s.k ** r < mma.DIGIT_BOUND
+                     and s.m ** r < mma.DIGIT_BOUND)
+         for s in SPECS}
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision exactness property: chain == integer closed form for
+# every level up to the asserted bound (large magnitudes included)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2), st.data())
+@settings(max_examples=60, deadline=None)
+def test_property_decode_exact_up_to_bound(which, data):
+    spec = SPECS[which]
+    r = data.draw(st.integers(1, MAX_R[spec.name]))
+    # bias toward the top of the index range, where f32 rounding would
+    # first show
+    i = data.draw(st.integers(max(0, spec.k ** r - 64),
+                              spec.k ** r - 1))
+    bx, by = mma.decode_linear(spec, r, jnp.int32(i))
+    ex, ey = spec.lambda_map_linear(int(i), r)
+    assert (int(bx), int(by)) == (int(ex), int(ey))
+    sx, sy = mma.slots_of_linear(spec, r, jnp.int32(i))
+    wx, wy = F.deinterleave_linear(int(i), spec.k, r)
+    assert (int(sx), int(sy)) == (int(wx), int(wy))
+
+
+@given(st.integers(0, 2), st.data())
+@settings(max_examples=60, deadline=None)
+def test_property_inverse_and_linear_exact(which, data):
+    spec = SPECS[which]
+    r = data.draw(st.integers(1, min(MAX_R[spec.name], 12)))
+    i = data.draw(st.integers(0, spec.k ** r - 1))
+    x, y = spec.lambda_map_linear(int(i), r)
+    li = mma.linear_of(spec, r, jnp.int32(int(x)), jnp.int32(int(y)))
+    assert int(li) == int(i)
+    sx, sy = mma.inverse_slots(spec, r, jnp.int32(int(x)),
+                               jnp.int32(int(y)))
+    ex, ey = spec.lambda_inverse(int(x), int(y), r)
+    assert (int(sx), int(sy)) == (int(ex), int(ey))
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_decode_exact_at_bound_edge_batch(spec):
+    """Dense check of the last 4k indices at the deepest in-bound
+    level: the largest magnitudes the chain ever accumulates."""
+    r = MAX_R[spec.name]
+    k_r = spec.k ** r
+    i = np.arange(max(0, k_r - 4096), k_r, dtype=np.int64)
+    bx, by = mma.decode_linear(spec, r, jnp.asarray(i, jnp.int32))
+    ex, ey = spec.lambda_map_linear(i, r)
+    np.testing.assert_array_equal(np.asarray(bx), np.asarray(ex))
+    np.testing.assert_array_equal(np.asarray(by), np.asarray(ey))
+
+
+def test_bound_is_asserted():
+    for spec in SPECS:
+        with pytest.raises(ValueError, match="2\\^24"):
+            mma.coords_basis(spec, MAX_R[spec.name] + 1)
+    with pytest.raises(ValueError, match="2\\^24"):
+        mma.decode_linear(F.SIERPINSKI, MAX_R["sierpinski-gasket"] + 1,
+                          jnp.int32(0))
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity on both interpret targets (the TPU structure
+# consumes the mma table, the GPU structure runs the chains in-kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["tpu-interpret", "gpu-interpret"])
+@pytest.mark.parametrize("storage", ["embedded", "compact"])
+def test_write_mma_matches_closed_form_both_targets(backend, storage):
+    from repro.kernels import ops
+    n, block = 64, 8
+    if storage == "compact":
+        from repro.core.compact import CompactLayout
+        from repro.core.domain import make_fractal_domain
+        lay = CompactLayout(make_fractal_domain("sierpinski-gasket",
+                                                n // block))
+        m = jnp.zeros(lay.array_shape(block), jnp.float32)
+        kw = dict(storage="compact", n=n)
+    else:
+        m = jnp.zeros((n, n), jnp.float32)
+        kw = {}
+    outs = [ops.sierpinski_write(m, 7.0, block=block, grid_mode=gm,
+                                 backend=backend, **kw)
+            for gm in ("closed_form", "mma")]
+    np.testing.assert_array_equal(np.asarray(outs[0]),
+                                  np.asarray(outs[1]))

@@ -186,14 +186,19 @@ def test_halo_strips_trim_bytes_and_never_mix_with_full(D):
              for hh in (1, 3)]
     full = h.bytes_exchanged(plan, 8, h=1)["full_rows"]
     assert 0 < sizes[0] <= sizes[1] <= full
+    # column trimming stacks on top: the occupied window never ships
+    # more than the full-width strip
+    by = h.bytes_exchanged(plan, 8, h=1)
+    assert 0 < by["trimmed"] <= by["strips"]
     # packed supertiles are not embedded-row-ordered: full rows only
     coarse = ShardedPlan(dom, "closed_form", storage="compact",
                          coarsen=2, mesh=_fake_mesh(D), axis="data",
                          halo=True)
     assert coarse.tile_map() is not None
-    assert all(cls == "full" for _, cls, _, _ in coarse.halo.rounds)
+    assert all(cls == "full" for _, cls, *_ in coarse.halo.rounds)
     byc = coarse.halo.bytes_exchanged(coarse, 8)
     assert byc["strips"] == byc["full_rows"]
+    assert byc["trimmed"] <= byc["strips"]
 
 
 # ---------------------------------------------------------------------------

@@ -69,10 +69,19 @@ def test_grid_shapes_per_lowering(dom):
     for lowering, want in (("closed_form", (dom.num_blocks,)),
                            ("prefetch_lut", (dom.num_blocks,)),
                            ("bounding", (nby, nbx)),
+                           ("mma", (dom.num_blocks,)),
                            ("compact", (dom.num_blocks,))):
         plan = GridPlan(dom, lowering, batch_dims=(3,))
         assert plan.grid == (3,) + want
-        assert plan.num_scalar_prefetch == (lowering == "prefetch_lut")
+        # prefetch_lut always binds its table; mma does only on
+        # block-indexed structures (the gpu structure chains in-kernel)
+        assert plan.num_scalar_prefetch == int(plan._table_backed)
+        if lowering == "prefetch_lut":
+            assert plan._table_backed
+        elif lowering == "mma":
+            assert plan._table_backed == plan.target.block_indexed
+        else:
+            assert not plan._table_backed
 
 
 @pytest.mark.parametrize("dom", _all_domains())
@@ -123,6 +132,7 @@ def test_lowering_names():
     assert xla_schedule("bounding") == "dense"
     assert xla_schedule("prefetch_lut") == "triangular"
     assert xla_schedule("compact") == "triangular"
+    assert xla_schedule("mma") == "triangular"
 
 
 # ---------------------------------------------------------------------------
@@ -148,8 +158,8 @@ def test_write_lowerings_bit_identical(fractal, n, block):
     outs = [np.asarray(ops.sierpinski_write(
         m, 7.0, block=block, grid_mode=gm, fractal=fractal))
         for gm in LOWERINGS]
-    np.testing.assert_array_equal(outs[0], outs[1])
-    np.testing.assert_array_equal(outs[0], outs[2])
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
     want = np.where(mask, np.float32(7.0), np.asarray(m))
     np.testing.assert_array_equal(outs[0], want)
 
@@ -161,6 +171,7 @@ def test_sum_lowerings_agree(fractal, n, block):
                                      fractal=fractal))
             for gm in LOWERINGS]
     assert sums[0] == sums[1]  # identical schedule -> bit-identical
+    assert sums[0] == sums[3]  # mma walks the same compact schedule
     np.testing.assert_allclose(sums[2], sums[0], rtol=1e-6)
     np.testing.assert_allclose(
         sums[0], float(np.asarray(m)[mask].sum()), rtol=1e-5)
@@ -180,8 +191,8 @@ def test_ca_lowerings_bit_identical(fractal, n, block, rule):
                                    block=block, grid_mode=gm,
                                    fractal=fractal))
             for gm in LOWERINGS]
-    np.testing.assert_array_equal(outs[0], outs[1])
-    np.testing.assert_array_equal(outs[0], outs[2])
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
     assert (outs[0][~mask] == 0).all()
 
 
@@ -195,8 +206,8 @@ def test_flash_lowerings_bit_identical(kind, kw):
     outs = [np.asarray(ops.flash_attention(q, k, v, kind=kind, block_q=64,
                                            block_k=64, grid_mode=gm, **kw))
             for gm in LOWERINGS]
-    np.testing.assert_array_equal(outs[0], outs[1])
-    np.testing.assert_array_equal(outs[0], outs[2])
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
     want = np.asarray(ref.attention_ref(q, k, v, kind, **kw))
     np.testing.assert_allclose(outs[0], want, rtol=2e-5, atol=2e-5)
 
@@ -210,8 +221,8 @@ def test_flash_full_compact_enumeration():
     outs = [np.asarray(ops.flash_attention(q, k, v, kind="full", block_q=64,
                                            block_k=128, grid_mode=gm))
             for gm in LOWERINGS]
-    np.testing.assert_array_equal(outs[0], outs[1])
-    np.testing.assert_array_equal(outs[0], outs[2])
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
 
 
 # ---------------------------------------------------------------------------

@@ -71,7 +71,7 @@ def test_sharded_ca_bit_identical_all_lowerings_and_storages():
     checked = 0
     for D in (2, 3, 4):
         mesh = jax.make_mesh((D,), ("data",))
-        for gm in ("closed_form", "prefetch_lut", "bounding"):
+        for gm in ("closed_form", "prefetch_lut", "bounding", "mma"):
             for storage in ("embedded", "compact"):
                 for rule, fuse, coarsen in (("parity", 3, 1),
                                             ("parity", 1, 2),
@@ -91,7 +91,7 @@ def test_sharded_ca_bit_identical_all_lowerings_and_storages():
                     checked += 1
     print("OK", checked)
     """)
-    assert "OK 54" in out
+    assert "OK 72" in out
 
 
 def test_sharded_ca_larger_domain_uneven_rows():
@@ -316,7 +316,8 @@ def test_halo_plan_resolves_every_remote_neighbor():
         # every (ghost row, strip class) is delivered by exactly one
         # ppermute round, from its owner's matching send slot
         delivered = {d: set() for d in range(D)}
-        for delta, cls, send, recv in halo.rounds:
+        for delta, cls, send, recv, scol, rcol, wc in halo.rounds:
+            assert 0 < wc <= plan.ncols
             for d in range(D):
                 src = (d - delta) % D
                 needs = [g for g in halo.ghost_rows[d]
@@ -325,6 +326,14 @@ def test_halo_plan_resolves_every_remote_neighbor():
                 for i, g in enumerate(needs):
                     assert send[src][i] == g - src * plan.rpd
                     assert recv[d][i] == halo.ghost_rows[d].index(g)
+                    # the shipped column window covers the readers'
+                    # span and stays in range, gathered and scattered
+                    # at the same clamped start
+                    lo_c, hi_c = halo.col_span[d][(g, cls)]
+                    c0 = int(rcol[d][i])
+                    assert scol[src][i] == c0
+                    assert 0 <= c0 <= lo_c and hi_c <= c0 + wc
+                    assert c0 + wc <= plan.ncols
                     delivered[d].add((g, cls))
         for d in range(D):
             want = {(g, c) for g in halo.ghost_rows[d]
