@@ -10,7 +10,7 @@ import os
 #: per-target lambda-vs-bounding A/B rows are also part of map/attn),
 #: hence its absence from the default no-``--only`` sweep below.
 SUITES = ("map", "space", "time", "ca", "sched", "shard", "overlap",
-          "attn", "backend")
+          "attn", "backend", "serve")
 
 
 def main(argv=None) -> None:
@@ -37,7 +37,8 @@ def main(argv=None) -> None:
     import jax
 
     from . import (bench_attention_domains, bench_ca, bench_map_time,
-                   bench_sierpinski_map, bench_space_efficiency, common)
+                   bench_serve, bench_sierpinski_map,
+                   bench_space_efficiency, common)
 
     print("name,us_per_call,derived")
     if only is None or "map" in only:
@@ -56,6 +57,10 @@ def main(argv=None) -> None:
         bench_ca.run(sched_ab=False)
     if only is None or "attn" in only:
         bench_attention_domains.run()
+    if only is None or "serve" in only:
+        bench_serve.run()
+        bench_serve.run_page_sizes()
+        bench_serve.run_zigzag_balance()
     if only is not None and "backend" in only:
         bench_sierpinski_map.run_backend_ab()
         bench_attention_domains.run_backend_ab()

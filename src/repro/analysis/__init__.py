@@ -12,7 +12,7 @@
 """
 from .sanitizer import AccessTrace, verify_launches
 from .verifier import (Finding, PlanVerificationError, Report,
-                       verify_or_raise, verify_plan)
+                       verify_or_raise, verify_page_table, verify_plan)
 
 __all__ = [
     "AccessTrace",
@@ -21,5 +21,6 @@ __all__ = [
     "Report",
     "verify_launches",
     "verify_or_raise",
+    "verify_page_table",
     "verify_plan",
 ]

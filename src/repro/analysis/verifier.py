@@ -928,3 +928,82 @@ def verify_or_raise(plan: GridPlan, *, kernel: str = "generic",
     finding -- the ``verify=`` debug-flag entry point of the kernels."""
     return verify_plan(plan, kernel=kernel,
                        checks=checks).raise_on_findings()
+
+
+# ---------------------------------------------------------------------------
+# paged KV page tables (the serving scheduler's host invariants)
+# ---------------------------------------------------------------------------
+
+def verify_page_table(table, seq_lens, *, page_size: int,
+                      num_pages: int, free_pages=(),
+                      null_page: int = 0) -> Report:
+    """Re-derive the page-table invariants of the paged KV pool from
+    first principles and report violations (the host-side analogue of
+    the plan LUT checks -- the table *is* a decode LUT pointed at
+    physical memory).
+
+    table:      (num_slots, max_pages) i32; seq_lens: per-slot live
+    token counts (0 = inactive).  Each slot's *active extent* is its
+    first ``ceil(len / page_size)`` entries.  Checks:
+
+    * **bounds** -- every entry in [0, num_pages);
+    * **null-in-extent** -- no active extent maps the null page (a
+      reader would consume trash-page garbage);
+    * **double-map** -- no physical page owned by two active extents
+      (a write in one request would corrupt another's KV);
+    * **stale-free** -- no active extent maps a page on the free list
+      (the allocator would hand it to the next admission: a
+      use-after-free);
+    * **tail-null** -- entries past the active extent are the null
+      page (a stale mapping there is a freed-page leak waiting for a
+      ``seq_pos`` bug to read it).
+    """
+    table = np.asarray(table)
+    findings: List[Finding] = []
+    if table.ndim != 2:
+        raise ValueError(f"page table must be 2-D, got {table.shape}")
+    if len(seq_lens) != table.shape[0]:
+        raise ValueError(f"{len(seq_lens)} seq_lens for "
+                         f"{table.shape[0]} slots")
+    free = set(int(p) for p in free_pages)
+    bad = (table < 0) | (table >= num_pages)
+    if bad.any():
+        s, j = map(int, np.argwhere(bad)[0])
+        findings.append(Finding(
+            "bounds", f"slot {s} entry {j} = {int(table[s, j])} outside "
+            f"[0, {num_pages})"))
+    owner: Dict[int, int] = {}
+    for s, n in enumerate(seq_lens):
+        ext = -(-int(n) // page_size)
+        for j in range(ext):
+            p = int(table[s, j])
+            if p == null_page:
+                findings.append(Finding(
+                    "null-in-extent",
+                    f"slot {s} ({n} tokens) maps the null page at "
+                    f"entry {j}"))
+                continue
+            if p in owner and owner[p] != s:
+                findings.append(Finding(
+                    "double-map",
+                    f"page {p} mapped by slots {owner[p]} and {s}"))
+            owner[p] = s
+            if p in free:
+                findings.append(Finding(
+                    "stale-free",
+                    f"slot {s} entry {j} maps freed page {p}"))
+        tail = table[s, ext:]
+        if (tail != null_page).any():
+            j = ext + int(np.argmax(tail != null_page))
+            findings.append(Finding(
+                "tail-null",
+                f"slot {s} ({n} tokens, extent {ext}) still maps page "
+                f"{int(table[s, j])} at entry {j}"))
+    plan_sig = {"kind": "page-table", "slots": int(table.shape[0]),
+                "max_pages": int(table.shape[1]),
+                "page_size": int(page_size),
+                "num_pages": int(num_pages)}
+    return Report(plan=plan_sig,
+                  checks=("bounds", "null-in-extent", "double-map",
+                          "stale-free", "tail-null"),
+                  findings=findings).raise_on_findings()

@@ -33,6 +33,24 @@ Partitions
     parent decode at a per-device offset.  Q and O shard along the
     sequence axis; K/V stay replicated.
 
+``"zigzag"`` (attention: balanced causal bands)
+    Contiguous bands are pathological for *causal* attention: row ``j``
+    of a triangular domain holds ``j + 1`` key blocks, so the last
+    device does ~``(2D - 1)/1`` times the work of the first.  The
+    zig-zag (snake) assignment gives device ``d`` rows ``{j : min(r,
+    2D-1-r) == d}`` with ``r = j mod 2D`` -- pairing light row ``k*2D +
+    d`` with heavy row ``k*2D + (2D-1-d)`` so every pair contributes
+    ``(2k)*2D + 2D + 1`` blocks *independent of d*: with ``nby % 2D ==
+    0`` (enforced) the split is exactly balanced.  The owned rows are
+    scattered, so the per-device enumeration is table-backed
+    (prefetch_lut / mma chunks carry global coords; ``bounding``
+    reconstructs the global row from the device id in the shard table);
+    the local row of global ``j`` is the closed form ``2*(j // 2D) + (r
+    >= D)``, used by ``_place_coords`` to address the device's Q/O
+    band.  Drivers permute Q block rows into the device-concatenated
+    snake order before shard_map and inverse-permute O after
+    (:func:`zigzag_row_order`).
+
 Per-device parameters inside SPMD
 ---------------------------------
 
@@ -71,16 +89,18 @@ from .compact import NEIGHBOR_OFFSETS8
 from .domain import BlockDomain
 from .plan import _LUT_NBR, GridPlan
 
-PARTITIONS = ("linear", "rows", "storage-rows")
+PARTITIONS = ("linear", "rows", "storage-rows", "zigzag")
 
 #: shard-table column layout (i32): [0] the device's linear offset
 #: (linear/rows) or first owned storage row (storage-rows); [1] the
 #: number of valid grid steps / owned blocks; [2] the first owned
-#: query-block row ("rows") -- then, for "storage-rows", the ghost map
-#: (global storage row -> row of the device's extended local array).
+#: query-block row ("rows") or the device index ("zigzag") -- then, for
+#: "storage-rows", the ghost map (global storage row -> row of the
+#: device's extended local array).
 SHARD_LO = 0
 SHARD_COUNT = 1
 SHARD_ROWLO = 2
+SHARD_DEV = 2
 SHARD_GMAP = 2
 
 
@@ -392,6 +412,35 @@ class ShardedPlan(GridPlan):
             self._count = np.diff(lo).astype(np.int64)
             self.steps_per_shard = int(self._count.max())
             self.halo = None
+        elif partition == "zigzag":
+            nbx, nby = self.sched_domain.bounding_box
+            coords = self.sched_domain.coords_host()
+            by = coords[:, 1]
+            if np.any(np.diff(by) < 0):
+                raise ValueError(
+                    f"'zigzag' partition needs a query-row-major "
+                    f"enumeration; {self.sched_domain.name} is not")
+            if nby % (2 * D):
+                raise ValueError(
+                    f"'zigzag' partition needs the query-block row count "
+                    f"({nby}) divisible by 2 * num_shards ({2 * D}) for "
+                    f"an exactly balanced snake")
+            r = by % (2 * D)
+            dev = np.minimum(r, 2 * D - 1 - r)
+            local = 2 * (by // (2 * D)) + (r >= D)
+            key = local.astype(np.int64) * nbx + coords[:, 0]
+            self.rbd = nby // D
+            self._zz_idx = []
+            for d in range(D):
+                sel = np.nonzero(dev == d)[0]
+                self._zz_idx.append(
+                    sel[np.argsort(key[sel], kind="stable")].astype(
+                        np.int64))
+            self._count = np.asarray(
+                [len(s) for s in self._zz_idx], np.int64)
+            self._lo = np.zeros(D, np.int64)
+            self.steps_per_shard = int(self._count.max())
+            self.halo = None
         else:  # linear
             N = self.sched_domain.num_blocks
             per = _ceil_div(N, D)
@@ -465,6 +514,8 @@ class ShardedPlan(GridPlan):
         cols = [self._row_lo_col(), self._count]
         if self.partition == "rows":
             cols.append(self._row_lo)
+        elif self.partition == "zigzag":
+            cols.append(np.arange(self.num_shards))
         tbl = np.stack([np.asarray(c, np.int64) for c in cols], -1)
         if self.partition == "storage-rows":
             tbl = np.concatenate([tbl, self.halo.ghost_map], axis=1)
@@ -504,10 +555,15 @@ class ShardedPlan(GridPlan):
         per = self.steps_per_shard
         out = np.zeros((self.num_shards, per, base.shape[1]), base.dtype)
         for d in range(self.num_shards):
-            lo, c = int(self._lo[d]), int(self._count[d])
-            fill = base[lo] if c else base[0]
-            out[d] = fill
-            out[d, :c] = base[lo:lo + c]
+            if self.partition == "zigzag":
+                idx = self._zz_idx[d]
+                c = len(idx)
+                out[d] = base[idx[0]] if c else base[0]
+                out[d, :c] = base[idx]
+            else:
+                lo, c = int(self._lo[d]), int(self._count[d])
+                out[d] = base[lo] if c else base[0]
+                out[d, :c] = base[lo:lo + c]
         out = out.reshape(self.num_shards * per, base.shape[1])
         out.setflags(write=False)
         return out
@@ -550,9 +606,15 @@ class ShardedPlan(GridPlan):
         per = self.steps_per_shard
         out = np.zeros((self.num_shards, per), np.int64)
         for d in range(self.num_shards):
-            lo, c = int(self._lo[d]), int(self._count[d])
-            out[d] = order[lo] if c else order[0]
-            out[d, :c] = order[lo:lo + c]
+            if self.partition == "zigzag":
+                idx = self._zz_idx[d]
+                c = len(idx)
+                out[d] = idx[0] if c else 0
+                out[d, :c] = idx
+            else:
+                lo, c = int(self._lo[d]), int(self._count[d])
+                out[d] = order[lo] if c else order[0]
+                out[d, :c] = order[lo:lo + c]
         out = out.reshape(self.num_shards * per)
         out.setflags(write=False)
         return out
@@ -643,7 +705,7 @@ class ShardedPlan(GridPlan):
     def grid(self):
         if self.lowering == "bounding":
             nbx, nby = self.sched_domain.bounding_box
-            if self.partition == "rows":
+            if self.partition in ("rows", "zigzag"):
                 return self.batch_dims + (self.rbd, nbx)
             return self.batch_dims + (nby, nbx)
         return self.batch_dims + (self.steps_per_shard,)
@@ -689,11 +751,18 @@ class ShardedPlan(GridPlan):
             by, bx = grid_ids[nb], grid_ids[nb + 1]
             if self.partition == "rows":
                 by = by + sref[SHARD_ROWLO]
+            elif self.partition == "zigzag":
+                by = self._zz_global_row(by, sref[SHARD_DEV])
             return batch, bx, by
         t = self._phase_step(grid_ids[nb], prefetch_refs)
         if self._table_backed:  # prefetch_lut, or mma on TPU structures
             lut_ref = prefetch_refs[1]
             return batch, lut_ref[t, 0], lut_ref[t, 1]
+        if self.partition == "zigzag":
+            raise ValueError(
+                "the zigzag partition's owned rows are scattered; its "
+                "linear enumeration decodes through tables "
+                "(prefetch_lut / mma) or the bounding grid")
         if self.partition == "storage-rows":
             col = t % self.ncols
             row = jnp.minimum(sref[SHARD_LO] + t // self.ncols,
@@ -710,9 +779,18 @@ class ShardedPlan(GridPlan):
             return batch, *self._mma_decode(i)
         return batch, *self.sched_domain.block_coords(i)
 
+    def _zz_global_row(self, local, dev):
+        """Local band row -> global query-block row of the snake."""
+        two_d = 2 * self.num_shards
+        return (local // 2) * two_d + jnp.where(
+            local % 2 == 0, dev, two_d - 1 - dev)
+
     def _place_coords(self, bx, by, prefetch_refs=()):
         if self.partition == "rows":
             return bx, by - prefetch_refs[0][SHARD_ROWLO]
+        if self.partition == "zigzag":
+            two_d = 2 * self.num_shards
+            return bx, 2 * (by // two_d) + (by % two_d >= self.num_shards)
         return bx, by
 
     def _step_valid(self, grid_ids, bx, by, prefetch_refs=()):
@@ -735,6 +813,12 @@ class ShardedPlan(GridPlan):
             nby = self.sched_domain.bounding_box[1]
             return (by >= sref[SHARD_ROWLO]) \
                 & (by < sref[SHARD_ROWLO] + self.rbd) & (by < nby)
+        if self.partition == "zigzag":
+            two_d = 2 * self.num_shards
+            r = by % two_d
+            nby = self.sched_domain.bounding_box[1]
+            return (jnp.minimum(r, two_d - 1 - r) == sref[SHARD_DEV]) \
+                & (by < nby)
         li = self.sched_domain.linear_index(bx, by)
         return (li >= sref[SHARD_LO]) \
             & (li < sref[SHARD_LO] + sref[SHARD_COUNT])
@@ -810,6 +894,26 @@ class ShardedPlan(GridPlan):
         iy = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
         ix = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
         return self.domain.contains(ix // block, iy // block)
+
+
+def zigzag_row_order(nby: int, num_shards: int) -> np.ndarray:
+    """(nby,) permutation: position ``d * (nby // D) + l`` holds the
+    global query-block row that device ``d``'s band row ``l`` owns
+    under the snake assignment.  shard_map splits an operand into
+    contiguous chunks, so a driver gathers Q block rows by this
+    permutation before the sharded launch and scatters O back through
+    its inverse (``np.argsort``) after."""
+    D = num_shards
+    if nby % (2 * D):
+        raise ValueError(f"zigzag needs nby ({nby}) divisible by 2*D "
+                         f"({2 * D})")
+    perm = np.empty(nby, np.int64)
+    rbd = nby // D
+    for d in range(D):
+        l = np.arange(rbd)
+        perm[d * rbd:(d + 1) * rbd] = \
+            (l // 2) * (2 * D) + np.where(l % 2 == 0, d, 2 * D - 1 - d)
+    return perm
 
 
 def device_tables(plan: ShardedPlan):

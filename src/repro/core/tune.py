@@ -74,6 +74,7 @@ def _sane_config(config: dict) -> bool:
         "num_stages": _pos_int,
         "block_q": _pos_int,
         "block_k": _pos_int,
+        "page_size": _pos_int,
         "num_warps": lambda v: v is None or _pos_int(v, 64),
     }
     for k, v in config.items():
@@ -646,6 +647,105 @@ def autotune_flash(*, kind: str = "causal", batch: int = 1, heads: int = 4,
                     verify=vfy)
 
 
+#: the full page-size axis the paged-decode search sweeps.  Page size
+#: trades pool fragmentation (small pages waste less tail) against
+#: gather granularity (large pages mean fewer LUT rows per step); like
+#: the flash block geometry, the winner is configuration dependent.
+ALL_PAGE_SIZES = (8, 16, 32, 64)
+
+
+def paged_candidates(seq: int, *, page_sizes=ALL_PAGE_SIZES,
+                     target=None):
+    """lowering x page_size for the paged decode kernel.  Page sizes
+    larger than the sequence are inviable (a one-page pool degenerates
+    to the contiguous layout and is covered by the flash search)."""
+    for lowering in _lowering_axis(target):
+        for ps in page_sizes:
+            if ps <= seq:
+                yield {"lowering": lowering, "page_size": ps}
+
+
+def autotune_paged(*, batch: int = 4, heads: int = 4,
+                   kv_heads: Optional[int] = None, seq: int = 256,
+                   d: int = 64, window: int = 0,
+                   page_sizes=ALL_PAGE_SIZES,
+                   cache: Optional[TuneCache] = None, force: bool = False,
+                   interpret: Optional[bool] = None, verbose: bool = False,
+                   backend=None, mesh=None, shard_axis: str = "data",
+                   verify: bool = False):
+    """Search lowering x page_size for the paged flash-decode kernel.
+
+    Every candidate decodes the *same* logical caches: contiguous K/V
+    are scattered into a fresh pool at each candidate's page size, so
+    the measurement isolates the layout axis.  The page pool is sized
+    to the candidate (``batch * ceil(seq/ps) + 1`` pages incl. the
+    null page), matching what a serving process at that page size
+    would hold live.  ``mesh=`` tunes the slot-sharded decode under a
+    shard-count-qualified key (warm-started from the D=1 winner);
+    ``verify=True`` statically verifies each candidate's paged plan
+    before it is measured."""
+    from repro.core import paged as paged_lib
+    from repro.models.attention import decode_attention_paged
+    import jax.numpy as jnp
+
+    if interpret is not None:
+        # the paged entry point has no interpret= knob of its own: the
+        # emulation choice rides the resolved target
+        from . import backend as backend_lib
+        backend = backend_lib.resolve(backend, interpret)
+    kv_heads = heads if kv_heads is None else kv_heads
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(batch, heads, 1, d)), jnp.float32)
+    k = rng.normal(size=(batch, kv_heads, seq, d)).astype(np.float32)
+    v = rng.normal(size=(batch, kv_heads, seq, d)).astype(np.float32)
+    pos = jnp.full((batch,), seq, jnp.int32)
+
+    def operands(ps: int):
+        npages = paged_lib.pages_for(seq, ps)
+        pool = paged_lib.init_pool(batch * npages + 1, kv_heads, ps, d)
+        table = np.full((batch, npages), paged_lib.NULL_PAGE, np.int32)
+        for b_ in range(batch):
+            pages = 1 + b_ * npages + np.arange(npages)
+            table[b_] = pages
+            pool = paged_lib.write_prefill_pages(
+                pool, jnp.asarray(pages, jnp.int32), k[b_], v[b_])
+        return pool, jnp.asarray(table)
+
+    pools = {ps: operands(ps) for ps in page_sizes if ps <= seq}
+
+    def build(cfg):
+        pool, table = pools[cfg["page_size"]]
+
+        def fn():
+            return decode_attention_paged(
+                q, pool, table, pos, window=window,
+                grid_mode=cfg["lowering"], backend=backend,
+                mesh=mesh, shard_axis=shard_axis)
+        return fn
+
+    vfy = None
+    if verify:
+        def vfy(cfg):
+            pool, table = pools[cfg["page_size"]]
+            decode_attention_paged(
+                q, pool, table, pos, window=window,
+                grid_mode=cfg["lowering"], backend=backend,
+                mesh=mesh, shard_axis=shard_axis, verify=True)
+
+    base = _axis_param(
+        {"batch": batch, "heads": heads, "kv_heads": kv_heads,
+         "seq": seq, "d": d, "window": window},
+        "page_sizes", page_sizes, ALL_PAGE_SIZES)
+    base = target_params(base, backend)
+    params = shard_params(base, mesh, shard_axis)
+    seed = best("paged", base, cache=cache) if mesh is not None else None
+    return autotune("paged", params,
+                    paged_candidates(seq, page_sizes=page_sizes,
+                                     target=backend),
+                    build, cache=cache, force=force, verbose=verbose,
+                    seed_config=seed, verify=vfy)
+
+
 # ---------------------------------------------------------------------------
 # CLI smoke: a deliberately tiny search so CI can exercise the full
 # measure -> persist -> reload path in seconds (interpret mode).
@@ -663,10 +763,10 @@ def main(argv=None):
     cache = TuneCache(args.cache) if args.cache else default_cache()
     if args.smoke:
         n, block, max_fuse, max_coarsen, blocks = 32, 8, 2, 2, (32,)
-        sq = 64
+        sq, pseq, psizes = 64, 32, (8, 16)
     else:
         n, block, max_fuse, max_coarsen, blocks = 256, 16, 8, 4, (64, 128)
-        sq = 512
+        sq, pseq, psizes = 512, 256, (16, 32, 64)
     for name, fn in (
         ("ca", lambda: autotune_ca(n=n, block=block, max_fuse=max_fuse,
                                    max_coarsen=max_coarsen, cache=cache,
@@ -676,6 +776,10 @@ def main(argv=None):
                                          cache=cache, force=args.force,
                                          verbose=True)),
         ("flash", lambda: autotune_flash(sq=sq, d=32, blocks=blocks,
+                                         cache=cache, force=args.force,
+                                         verbose=True)),
+        ("paged", lambda: autotune_paged(batch=2, heads=2, seq=pseq,
+                                         d=32, page_sizes=psizes,
                                          cache=cache, force=args.force,
                                          verbose=True)),
     ):

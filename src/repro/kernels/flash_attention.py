@@ -101,10 +101,12 @@ def _attn_tile_update(q, k, v, acc, m_prev, l_prev, *, kind, window, qb,
 
 
 def _attn_kernel(coords, *refs, kind, window, scale, block_q, block_k,
-                 m_k, wb, off, has_pos):
+                 m_k, wb, off, h, has_pos):
     """Block-indexed (TPU) attention kernel: one (qb, kb) tile per grid
     step, online-softmax state in VMEM scratch across the sequential
-    grid."""
+    grid.  ``pos_ref`` (when present) is the whole (B,) decode-position
+    vector in SMEM; the batch row of this program is the leading grid
+    id divided by the head count ``h``."""
     if has_pos:
         q_ref, k_ref, v_ref, pos_ref, o_ref, acc_ref, m_ref, l_ref = refs
     else:
@@ -113,7 +115,7 @@ def _attn_kernel(coords, *refs, kind, window, scale, block_q, block_k,
     start, end = _row_bounds(kind, qb, m_k, wb, off // block_q)
     pos = None
     if has_pos:
-        pos = pos_ref[0]
+        pos = pos_ref[coords.batch[0] // h]
         end = jnp.minimum(end, pos // block_k)
         if kind == "full" and window:
             start = jnp.maximum(
@@ -158,6 +160,7 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
                     wb, off, block_q, block_k, d, kind, window, scale,
                     out_shape, dtype, s0, sk_arr, has_pos,
                     row_extents=None, sharded=False, rows_local=None,
+                    zigzag=False, num_shards=1,
                     num_warps=None, num_stages=None):
     """gpu-structured flash attention: grid ``(batch*heads, q_rows)``,
     one program per query-block row, an in-kernel ``fori_loop`` over
@@ -186,8 +189,9 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
     Returns ``call(*tables, q, k, v[, pos])`` where ``tables`` is the
     row-extents operand under ``prefetch_lut``/``mma`` plus the
     per-device shard-table row when ``sharded`` (global query row =
-    local row + ``tbl[SHARD_ROWLO]``)."""
-    from repro.core.shard import SHARD_ROWLO
+    local row + ``tbl[SHARD_ROWLO]``, or the snake row rebuilt from the
+    device id at ``tbl[SHARD_DEV]`` under ``zigzag``)."""
+    from repro.core.shard import SHARD_DEV, SHARD_ROWLO
 
     n_ext = 1 if lowering in ("prefetch_lut", "mma") else 0
     n_tbl = 1 if sharded else 0
@@ -207,7 +211,12 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
         o_ref = refs[-1]
 
         qb = pl.program_id(1)
-        if sharded:
+        if sharded and zigzag:
+            two_d = 2 * num_shards
+            dev = tbl_ref[SHARD_DEV]
+            qb = (qb // 2) * two_d + jnp.where(
+                qb % 2 == 0, dev, two_d - 1 - dev)
+        elif sharded:
             qb = qb + tbl_ref[SHARD_ROWLO]
         if lowering in ("prefetch_lut", "mma"):
             start, end = ext_ref[qb, 0], ext_ref[qb, 1]
@@ -217,7 +226,7 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
             start, end = _row_bounds(kind, qb, m_k, wb, off // block_q)
         pos = None
         if has_pos:
-            pos = pos_ref[0]
+            pos = pos_ref[pl.program_id(0) // h]
             end = jnp.minimum(end, pos // block_k)
             if kind == "full" and window:
                 start = jnp.maximum(
@@ -294,7 +303,7 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
         in_specs.append(None)  # placeholder: shape known at call time
     in_specs += [q_spec(), kv_spec, kv_spec]
     if has_pos:
-        in_specs.append(full_spec((1,)))
+        in_specs.append(full_spec((b,)))
 
     interp = target.interpret
     extra = target.call_kwargs(num_warps, num_stages)
@@ -319,11 +328,12 @@ def _gpu_flash_call(*, target, domain, lowering, b, h, group, m_q, m_k,
 @functools.partial(jax.jit, static_argnames=(
     "kind", "window", "scale", "block_q", "block_k", "grid_mode",
     "storage", "kv_seq_len", "backend", "num_warps", "num_stages",
-    "mesh", "shard_axis", "verify"))
+    "mesh", "shard_axis", "shard_balance", "verify"))
 def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
                 block_k, grid_mode, storage, kv_seq_len, backend,
                 num_warps=None, num_stages=None, mesh=None,
-                shard_axis="data", verify=False):
+                shard_axis="data", shard_balance="contiguous",
+                verify=False):
     b, h, sq, d = q.shape
     _, hkv, sk_arr, _ = k.shape
     group = h // hkv
@@ -371,16 +381,41 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
             "repro.models.attention.decode_attention_flash)")
 
     domain = make_attention_domain(kind, m_q, m_k, wb)
+    zz_perm = None
     if mesh is not None:
-        from repro.core.shard import ShardedPlan
+        from repro.core.shard import ShardedPlan, zigzag_row_order
         D = int(mesh.shape[shard_axis])
         if m_q % D:
             raise ValueError(
                 f"sharded flash needs the query-block grid divisible by "
                 f"the mesh axis: m_q={m_q} blocks over {D} devices")
+        partition = "rows"
+        if shard_balance == "zigzag":
+            if kind != "causal":
+                raise ValueError(
+                    "shard_balance='zigzag' balances the causal "
+                    "triangle; contiguous bands already balance "
+                    f"kind={kind!r}")
+            if m_q % (2 * D):
+                raise ValueError(
+                    f"zigzag needs the query-block grid ({m_q}) "
+                    f"divisible by 2 * mesh axis ({2 * D}) for an "
+                    f"exactly balanced snake")
+            if target.block_indexed and grid_mode in ("closed_form",
+                                                      "compact"):
+                # the snake's owned rows are scattered: the sequential
+                # structure decodes them through the LUT (bit-identical
+                # to the closed form by the engine's contract)
+                grid_mode = "prefetch_lut"
+            partition = "zigzag"
+            zz_perm = zigzag_row_order(m_q, D)
+        elif shard_balance != "contiguous":
+            raise ValueError(
+                f"unknown shard_balance {shard_balance!r}; expected "
+                f"'contiguous' or 'zigzag'")
         plan = ShardedPlan(domain, grid_mode, batch_dims=(b * h,),
                            backend=target, mesh=mesh, axis=shard_axis,
-                           partition="rows")
+                           partition=partition)
         out_shape = (b, h, sq // D, d)
     else:
         plan = GridPlan(domain, grid_mode, batch_dims=(b * h,),
@@ -400,7 +435,16 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
 
     pos_operand = ()
     if has_pos:
-        pos_operand = (jnp.reshape(seq_pos, (1,)).astype(jnp.int32),)
+        # normalize to a per-batch-row (B,) vector: a scalar broadcasts
+        # (back-compat), a vector carries one decode position per slot.
+        sp = jnp.asarray(seq_pos, jnp.int32)
+        if sp.ndim == 0 or sp.shape == (1,):
+            sp = jnp.broadcast_to(sp.reshape(()), (b,))
+        elif sp.shape != (b,):
+            raise ValueError(
+                f"seq_pos must be a scalar or a ({b},) per-row vector, "
+                f"got shape {sp.shape}")
+        pos_operand = (sp,)
 
     if not target.block_indexed:
         lowering = plan.lowering
@@ -420,6 +464,9 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
             row_extents=extents, sharded=mesh is not None,
             rows_local=(m_q // int(mesh.shape[shard_axis])
                         if mesh is not None else None),
+            zigzag=zz_perm is not None,
+            num_shards=(int(mesh.shape[shard_axis])
+                        if mesh is not None else 1),
             num_warps=num_warps, num_stages=num_stages)
         if mesh is None:
             return call(q, k, v, *pos_operand)
@@ -434,7 +481,7 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
         kernel = functools.partial(
             _attn_kernel, kind=kind, window=window, scale=scale,
             block_q=block_q, block_k=block_k, m_k=m_k, wb=wb, off=off,
-            has_pos=has_pos)
+            h=h, has_pos=has_pos)
 
         in_specs = [
             plan.block_spec((1, 1, block_q, d), q_place),
@@ -480,12 +527,23 @@ def _flash_impl(q, k, v, seq_pos=None, *, kind, window, scale, block_q,
     def device_fn(tbl, luts, q, k, v):
         return call(tbl.reshape(-1), *luts, q, k, v)
 
-    return shard_map(
+    if zz_perm is not None:
+        # shard_map splits contiguous chunks: gather the Q block rows
+        # into device-concatenated snake order first, and scatter the
+        # output back through the inverse permutation after.
+        qr = q.reshape(b, h, m_q, block_q, d)
+        q = qr[:, :, zz_perm].reshape(b, h, sq, d)
+    out = shard_map(
         device_fn, mesh=mesh,
         in_specs=(P(axis, None), tuple(P(axis, None) for _ in luts))
         + qkv_specs,
         out_specs=P(None, None, axis, None), check_rep=False)(
             tbl, luts, q, k, v)
+    if zz_perm is not None:
+        inv = np.argsort(zz_perm)
+        out = out.reshape(b, h, m_q, block_q, d)[:, :, inv]
+        out = out.reshape(b, h, sq, d)
+    return out
 
 
 def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
@@ -497,7 +555,9 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                     backend=None, num_warps: int | str | None = None,
                     num_stages: int | str | None = None,
                     interpret: bool | None = None, mesh=None,
-                    shard_axis: str = "data", verify: bool = False):
+                    shard_axis: str = "data",
+                    shard_balance: str = "contiguous",
+                    verify: bool = False):
     """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with Hkv | H.
 
     kind:      "causal" | "local" (window tokens) | "full"
@@ -514,12 +574,14 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                see :func:`repro.core.compact.pack_kv`).  When the
                support is a strict suffix (rectangular local), pass the
                true key length as ``kv_seq_len``.
-    seq_pos:   run-time () int32 decode position (requires
-               ``kind="full"``; combine with ``window=`` for a
-               run-time sliding window): keys at ``kpos > seq_pos``
+    seq_pos:   run-time int32 decode position -- a () scalar (every
+               batch row at the same position) or a (B,) vector with
+               one position per batch row (continuous batching;
+               requires ``kind="full"``; combine with ``window=`` for
+               a run-time sliding window): keys at ``kpos > seq_pos``
                are masked and key blocks beyond ``seq_pos // block_k``
-               are predicated off (an SMEM scalar on TPU, a regular
-               scalar operand on GPU).  The gpu structure's loop bound
+               are predicated off (an SMEM vector on TPU, a regular
+               operand on GPU).  The gpu structure's loop bound
                truncates the tile *reads* too; the TPU structure's
                static grid still pipelines every tile and skips only
                their compute.
@@ -545,6 +607,14 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
     contiguous query-row bands (one owner per row, so the online
     softmax never crosses devices and results are bit-identical); k/v
     stay replicated.  Requires Sq/block_q divisible by the axis size.
+
+    ``shard_balance="zigzag"`` (causal only) replaces the contiguous
+    bands with the snake assignment: device ``d`` owns query-block rows
+    ``{j : min(j mod 2D, 2D-1-(j mod 2D)) == d}``, pairing light and
+    heavy triangle rows so every device runs exactly the same number of
+    key blocks (requires Sq/block_q divisible by 2D).  Q is permuted
+    into snake order before the sharded launch and O inverse-permuted
+    after, so results stay bit-identical to the contiguous split.
     """
     target = backend_lib.resolve(backend, interpret)
     from repro.core import tune
@@ -573,4 +643,235 @@ def flash_attention(q, k, v, *, kind: str = "causal", window: int = 0,
                        grid_mode=grid_mode, storage=storage,
                        kv_seq_len=kv_seq_len, backend=target,
                        num_warps=num_warps, num_stages=num_stages,
-                       mesh=mesh, shard_axis=shard_axis, verify=verify)
+                       mesh=mesh, shard_axis=shard_axis,
+                       shard_balance=shard_balance, verify=verify)
+
+
+# ---------------------------------------------------------------------------
+# paged decode: the page table rides the scalar-prefetch LUT mechanism
+# ---------------------------------------------------------------------------
+
+def _paged_attn_kernel(coords, *refs, window, scale, page_size, h,
+                       has_window):
+    """Block-indexed (TPU) paged decode kernel.  One grid step per
+    (slot*head, logical key block); the *physical* page was already
+    resolved by the KV BlockSpec index map reading the prefetched page
+    table, so the kernel sees a ``(1, 2, page_size, d)`` fused tile:
+    row 0 of the head-pair axis is K, row 1 is V.  Masking uses the
+    *logical* block id (``coords.bx``), so results are bit-identical to
+    the contiguous ``seq_pos`` path."""
+    q_ref, kv_ref, pos_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    kb = coords.bx
+    pos = pos_ref[coords.batch[0] // h]
+    start = 0 * kb
+    end = pos // page_size
+    if has_window:
+        start = jnp.maximum(pos - window + 1, 0) // page_size
+
+    def body():
+        @pl.when(kb == start)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = kv_ref[0, 0].astype(jnp.float32)
+        v = kv_ref[0, 1].astype(jnp.float32)
+        acc_new, m_new, l_new = _attn_tile_update(
+            q, k, v, acc_ref[...], m_ref[...], l_ref[...], kind="full",
+            window=window if has_window else 0, qb=0 * kb, kb=kb,
+            block_q=1, block_k=page_size, off=0, seq_pos=pos)
+        acc_ref[...] = acc_new
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+        @pl.when(kb == end)
+        def _():
+            l = l_ref[...]
+            l = jnp.where(l == 0, 1.0, l)
+            o_ref[0, 0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+    live = (kb <= end) & (kb >= start)
+    if coords.valid is None:
+        pl.when(live)(body)
+    else:
+        pl.when(coords.valid & live)(body)
+
+
+def _gpu_paged_call(*, target, b, h, group, m_k, page_size, d, window,
+                    scale, out_shape, dtype, num_warps=None,
+                    num_stages=None):
+    """gpu-structured paged decode: one program per (slot, head), the
+    whole pool and page table as HBM operands, an in-kernel loop over
+    the slot's logical key blocks that resolves each physical page with
+    a table read and ``pl.load``\\ s the fused ``(2, page_size, d)``
+    head tile at its offset.  The loop bound comes from the slot's
+    ``seq_pos``, so only O(pos / page_size) pages are *read* -- the
+    block-space work saving at run time."""
+
+    def kern(pt_ref, q_ref, kv_ref, pos_ref, o_ref):
+        bh = pl.program_id(0)
+        slot = bh // h
+        kvh = (bh % h) // group
+        pos = pos_ref[slot]
+        start = 0 * pos
+        end = pos // page_size
+        if window:
+            start = jnp.maximum(pos - window + 1, 0) // page_size
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+
+        def load_tiles(kb):
+            page = pt_ref[slot, kb]
+            t = pl.load(kv_ref, (pl.ds(page, 1), pl.ds(2 * kvh, 2),
+                                 pl.ds(0, page_size), pl.ds(0, d)))
+            t = t.reshape(2, page_size, d).astype(jnp.float32)
+            return t[0], t[1]
+
+        def step(j, carry):
+            kb = start + j
+            k_t, v_t = load_tiles(kb)
+            return _attn_tile_update(
+                q, k_t, v_t, *carry, kind="full", window=window,
+                qb=0 * kb, kb=kb, block_q=1, block_k=page_size, off=0,
+                seq_pos=pos)
+
+        acc0 = (jnp.zeros((1, d), jnp.float32),
+                jnp.full((1, 1), NEG_INF, jnp.float32),
+                jnp.zeros((1, 1), jnp.float32))
+        acc, _, l = jax.lax.fori_loop(0, end - start + 1, step, acc0)
+        l = jnp.where(l == 0, 1.0, l)
+        o_ref[0, 0, ...] = (acc / l).astype(o_ref.dtype)
+
+    q_spec = pl.BlockSpec((1, 1, 1, d), lambda bh: (bh // h, bh % h, 0, 0))
+    extra = target.call_kwargs(num_warps, num_stages)
+
+    def call(pt, q, kv_pool, pos):
+        c = pl.pallas_call(
+            kern, grid=(b * h,),
+            in_specs=[full_spec(pt.shape), q_spec,
+                      full_spec(kv_pool.shape), full_spec((b,))],
+            out_specs=q_spec,
+            out_shape=jax.ShapeDtypeStruct(out_shape, dtype),
+            interpret=target.interpret, **extra)
+        return c(pt, q, kv_pool, pos)
+
+    return call
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "grid_mode", "backend", "num_warps",
+    "num_stages", "verify"))
+def _paged_impl(q, kv_pool, page_table, seq_pos, *, window, scale,
+                grid_mode, backend, num_warps=None, num_stages=None,
+                verify=False):
+    from repro.core.paged import PagedPlan
+
+    b, h, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"paged decode is single-token: Sq={sq}")
+    num_pages, h2, page_size, dp = kv_pool.shape
+    if h2 % 2 or dp != d:
+        raise ValueError(
+            f"kv_pool must be (P, 2*Hkv, page_size, {d}), got "
+            f"{kv_pool.shape}")
+    hkv = h2 // 2
+    group = h // hkv
+    m_k = page_table.shape[1]
+    if page_table.shape[0] != b:
+        raise ValueError(
+            f"page_table rows ({page_table.shape[0]}) != slots ({b})")
+    target = backend
+    if scale is None:
+        scale = float(1.0 / np.sqrt(d))
+    page_table = page_table.astype(jnp.int32)
+    pos = jnp.broadcast_to(
+        jnp.asarray(seq_pos, jnp.int32).reshape(-1), (b,))
+
+    domain = make_attention_domain("full", 1, m_k, 0)
+    if verify:
+        from repro.analysis import verify_or_raise
+        verify_or_raise(GridPlan(domain, grid_mode, batch_dims=(b * h,),
+                                 backend=target), kernel="flash")
+
+    if not target.block_indexed:
+        call = _gpu_paged_call(
+            target=target, b=b, h=h, group=group, m_k=m_k,
+            page_size=page_size, d=d, window=window, scale=scale,
+            out_shape=q.shape, dtype=q.dtype, num_warps=num_warps,
+            num_stages=num_stages)
+        return call(page_table, q, kv_pool, pos)
+
+    plan = PagedPlan(domain, grid_mode, batch_dims=(b * h,),
+                     backend=target, page_table=page_table)
+
+    def q_place(bx, by, bh):
+        return (bh // h, bh % h, 0, 0)
+
+    def kv_index(grid_ids, refs):
+        # refs[0] is the prefetched page table; the decoded bx is the
+        # *logical* key block, translated here to its physical page.
+        _, bx, _ = plan._decode(grid_ids, refs)
+        bh = grid_ids[0]
+        page = refs[0][bh // h, bx]
+        return (page, (bh % h) // group, 0, 0)
+
+    kernel = functools.partial(
+        _paged_attn_kernel, window=window, scale=scale,
+        page_size=page_size, h=h, has_window=bool(window))
+    call = plan.pallas_call(
+        kernel,
+        in_specs=[
+            plan.block_spec((1, 1, 1, d), q_place),
+            plan._index_spec((1, 2, page_size, d), kv_index),
+            target.scalar_spec(),
+        ],
+        out_specs=plan.block_spec((1, 1, 1, d), q_place),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            target.scratch((1, d), jnp.float32),
+            target.scratch((1, 1), jnp.float32),
+            target.scratch((1, 1), jnp.float32),
+        ],
+        num_warps=num_warps, num_stages=num_stages,
+    )
+    return call(q, kv_pool, pos)
+
+
+def paged_flash_attention(q, kv_pool, page_table, seq_pos, *,
+                          window: int = 0, scale: float | None = None,
+                          grid_mode: str = "compact", backend=None,
+                          num_warps: int | None = None,
+                          num_stages: int | None = None,
+                          interpret: bool | None = None,
+                          verify: bool = False):
+    """Paged single-token decode attention over a fused-KV page pool.
+
+    q:          (B, H, 1, D) -- one query per serving slot.
+    kv_pool:    (P, 2*Hkv, page_size, D) physical pages, K/V heads
+                interleaved ``[K0, V0, K1, V1, ...]`` (see
+                :mod:`repro.core.paged`); page 0 is the null page.
+    page_table: (B, max_pages) i32 logical-block -> physical-page map
+                per slot (null-page entries beyond each slot's length).
+    seq_pos:    (B,) int32 per-slot decode positions (a scalar
+                broadcasts).  Keys beyond a slot's position are masked;
+                pages beyond ``pos // page_size`` are never touched on
+                the gpu structure and compute-predicated off on the TPU
+                structure.
+    window:     optional run-time sliding window anchored at seq_pos.
+
+    The page table travels exactly like the engine's decode LUT: a
+    scalar-prefetch operand on block-indexed targets (resolved in the
+    KV BlockSpec index map -- the lambda-map indirection of the paper,
+    pointed at physical memory), a leading HBM operand read in-kernel
+    on gpu structures.  Bit-identical to the contiguous
+    ``flash_attention(..., kind="full", seq_pos=...)`` path with
+    ``block_k == page_size`` when the mapped pages hold the same
+    values."""
+    target = backend_lib.resolve(backend, interpret)
+    from repro.core.plan import normalize_lowering
+    return _paged_impl(q, kv_pool, page_table, seq_pos, window=window,
+                       scale=scale,
+                       grid_mode=normalize_lowering(grid_mode),
+                       backend=target, num_warps=num_warps,
+                       num_stages=num_stages, verify=verify)

@@ -29,6 +29,7 @@ Chaos-smoke (deterministic fault injection; see repro.runtime.chaos):
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import os
 import time
@@ -321,6 +322,335 @@ class Server:
         return np.asarray(jnp.concatenate(out, axis=1))
 
 
+# ---------------------------------------------------------------------------
+# paged continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PagedServeConfig(ServeConfig):
+    """ServeConfig plus the paged-pool knobs.  ``num_pages`` includes
+    the reserved null page, so usable capacity is ``(num_pages - 1) *
+    page_size`` tokens across all slots; ``max_len`` bounds one
+    request's prompt + generation (it sizes the page table width, not
+    any per-slot preallocation -- that is the whole point)."""
+    num_slots: int = 4
+    page_size: int = 16
+    num_pages: int = 64
+
+
+@dataclasses.dataclass
+class _PagedRequest:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    pages: list = dataclasses.field(default_factory=list)
+    next_pos: int = 0       # where the next fed token's KV lands
+    seq: int = -1           # admission order (eviction priority)
+    preemptions: int = 0
+
+
+class PagedServer:
+    """Continuous-batching serving over the paged KV pool.
+
+    The decode batch is a fixed set of ``num_slots`` *slots* (static
+    jitted shapes); requests stream through them.  Admission runs an
+    unpadded prefill for one request, allocates ``ceil(len / page_size)``
+    physical pages from the free list, and scatters the prefill KV into
+    them (:func:`repro.models.model.scatter_prefill_pages`); every
+    decode step then advances *all* active slots one token at their own
+    positions (the per-row ``seq_pos`` vector) while inactive slots
+    write to the null page.  Pages are allocated on demand as slots
+    cross page boundaries; when the pool runs dry the youngest active
+    request is preempted -- its pages freed, the request requeued with
+    its generated tokens kept, to be re-admitted by replaying
+    prompt + generated through prefill (recompute-style preemption).
+
+    Sampling keys derive from ``(seed, request_id, position)``, so a
+    preempted-and-readmitted request keeps drawing the same stream --
+    eviction composes with the replay-deterministic robustness story of
+    :class:`Server`.  Repeated decode failure walks the degradation
+    ladder paged-blockspace -> paged-xla (the
+    :func:`~repro.models.attention.decode_attention_paged_xla` gather
+    rung), re-jitting the step like :meth:`Server._apply_rung` does.
+    """
+
+    _guarded = Server._guarded
+    _write_report = Server._write_report
+    check_substrate = Server.check_substrate
+
+    def __init__(self, cfg: ModelConfig, params, scfg: PagedServeConfig,
+                 chaos=None):
+        from repro.core import paged as paged_lib
+
+        model_lib._check_paged(cfg)
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.chaos = chaos
+        self.mesh = None
+        self.state = ServerState.HEALTHY
+        self.events: list = []
+        self.stats_history: list = []
+        self._paged_lib = paged_lib
+        self.alloc = paged_lib.PagedKVPool(scfg.num_pages, scfg.page_size)
+        self.max_pages = -(-scfg.max_len // scfg.page_size)
+        self.pools = model_lib.init_paged_cache(
+            cfg, scfg.num_pages, scfg.page_size)
+        self.table = np.full((scfg.num_slots, self.max_pages),
+                             paged_lib.NULL_PAGE, np.int32)
+        self.slots: list = [None] * scfg.num_slots
+        self.pending: collections.deque = collections.deque()
+        self.done: dict = {}
+        self._admit_seq = 0
+        self.ladder = DegradationLadder(
+            self._rungs(cfg),
+            on_transition=lambda rec: self.events.append(
+                {"kind": "degrade", **rec}))
+        self._base_key = jax.random.PRNGKey(scfg.seed)
+        self._canary_ref = None
+        self._prefill_fn = jax.jit(partial(prefill, cfg=cfg))
+        self._scatter_fn = jax.jit(
+            partial(model_lib.scatter_prefill_pages, cfg=cfg))
+        self._decode_fn = None
+        self._apply_rung(self.ladder.current())
+        self._prefill = self._guarded("serve.prefill",
+                                      lambda *a: self._prefill_fn(*a))
+        self._decode = self._guarded("serve.decode",
+                                     lambda *a: self._decode_fn(*a))
+
+    @staticmethod
+    def _rungs(cfg: ModelConfig) -> list:
+        top = {"decode_kernel": cfg.attn_decode_kernel}
+        rungs = [top]
+        if cfg.attn_decode_kernel == "blockspace":
+            rungs.append({"decode_kernel": "xla"})  # paged-xla gather
+        return rungs
+
+    def _apply_rung(self, rung: dict) -> None:
+        cfg = self.cfg.replace(attn_decode_kernel=rung["decode_kernel"])
+        self._decode_fn = jax.jit(
+            partial(model_lib.decode_step_paged, cfg=cfg))
+
+    # -- host bookkeeping ----------------------------------------------------
+
+    def _verify_table(self) -> None:
+        if not self.scfg.validate:
+            return
+        from repro.analysis.verifier import verify_page_table
+        verify_page_table(
+            self.table,
+            seq_lens=[(r.next_pos if r is not None else 0)
+                      for r in self.slots],
+            page_size=self.scfg.page_size,
+            num_pages=self.scfg.num_pages,
+            free_pages=self.alloc._free)
+
+    def pool_stats(self) -> dict:
+        return self.alloc.stats(
+            [r.next_pos for r in self.slots if r is not None])
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, rid: int, prompt: np.ndarray, max_new: int) -> None:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + max_new > self.scfg.max_len:
+            raise ValueError(
+                f"request {rid}: prompt {len(prompt)} + max_new "
+                f"{max_new} exceeds max_len {self.scfg.max_len}")
+        self.pending.append(_PagedRequest(
+            rid=int(rid), prompt=prompt, max_new=int(max_new)))
+
+    def _sample_token(self, logits_row, rid: int, pos: int) -> int:
+        """One token from a (V,) logits row.  The key is a pure
+        function of (seed, request id, position): a preempted and
+        re-admitted request draws the identical stream."""
+        scfg = self.scfg
+        if scfg.temperature <= 0:
+            return int(np.argmax(np.asarray(logits_row)))
+        scaled = np.asarray(logits_row, np.float32) / scfg.temperature
+        if scfg.top_k:
+            kth = np.sort(scaled)[-scfg.top_k]
+            scaled = np.where(scaled < kth, -1e30, scaled)
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, rid), pos)
+        return int(jax.random.categorical(key, jnp.asarray(scaled)))
+
+    def _admit_one(self) -> bool:
+        """Admit the head-of-line request if a slot and enough pages
+        are free.  Returns True on admission."""
+        if not self.pending:
+            return False
+        free_slots = [i for i, s in enumerate(self.slots) if s is None]
+        if not free_slots:
+            return False
+        req = self.pending[0]
+        tokens = np.concatenate(
+            [req.prompt, np.asarray(req.out, np.int32)])
+        need = self._paged_lib.pages_for(len(tokens), self.scfg.page_size)
+        if not self.alloc.can_alloc(need):
+            return False
+        self.pending.popleft()
+        pages = self.alloc.alloc(need)
+        slot = free_slots[0]
+        logits, caches = self._prefill(
+            self.params, jnp.asarray(tokens[None]))
+        self.pools = self._scatter_fn(
+            self.pools, caches, jnp.asarray(pages, jnp.int32))
+        req.pages = list(pages)
+        req.seq = self._admit_seq
+        self._admit_seq += 1
+        req.next_pos = len(tokens)
+        self.table[slot] = self._paged_lib.NULL_PAGE
+        self.table[slot, :len(pages)] = pages
+        self.slots[slot] = req
+        self._verify_table()
+        tok = self._sample_token(np.asarray(logits)[0, 0], req.rid,
+                                 len(tokens) - 1)
+        req.out.append(tok)
+        if self._finished(slot, tok):
+            return True
+        self.events.append({"kind": "admit", "rid": req.rid,
+                            "slot": slot, "pages": len(pages),
+                            "replayed": len(req.out) - 1})
+        return True
+
+    def _finished(self, slot: int, tok: int) -> bool:
+        req = self.slots[slot]
+        if len(req.out) >= req.max_new or (
+                self.scfg.eos_id >= 0 and tok == self.scfg.eos_id):
+            self.alloc.free(req.pages)
+            self.table[slot] = self._paged_lib.NULL_PAGE
+            self.slots[slot] = None
+            self.done[req.rid] = np.asarray(req.out, np.int32)
+            self.events.append({"kind": "finish", "rid": req.rid,
+                                "tokens": len(req.out),
+                                "preemptions": req.preemptions})
+            self._verify_table()
+            return True
+        return False
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slots[slot]
+        self.alloc.free(req.pages)
+        req.pages = []
+        req.preemptions += 1
+        self.table[slot] = self._paged_lib.NULL_PAGE
+        self.slots[slot] = None
+        self.pending.appendleft(req)  # re-admit first
+        self.events.append({"kind": "preempt", "rid": req.rid,
+                            "slot": slot, "generated": len(req.out)})
+        # no _verify_table here: surviving slots may already hold the
+        # look-ahead page grown for the write this step, which the
+        # verifier would flag as tail-null until next_pos advances.
+        # step() verifies once the step is quiescent.
+
+    def _grow(self, slot: int) -> bool:
+        """Ensure the slot owns the page its next KV write lands in."""
+        req = self.slots[slot]
+        while req.next_pos // self.scfg.page_size >= len(req.pages):
+            got = self.alloc.alloc(1)
+            if got is None:
+                return False
+            self.table[slot, len(req.pages)] = got[0]
+            req.pages += got
+        return True
+
+    def _decode_step(self, toks, posv, act):
+        while True:
+            try:
+                return self._decode(self.params, toks, self.pools,
+                                    jnp.asarray(self.table), posv, act)
+            except GuardExhausted as e:
+                if not self.ladder.step_down(reason=str(e)):
+                    e.report.transitions = list(self.ladder.transitions)
+                    self._write_report(e.report)
+                    raise
+                self.state = ServerState.DEGRADED
+                self._apply_rung(self.ladder.current())
+
+    def step(self) -> bool:
+        """One decode step for every active slot.  Returns False when
+        nothing is active."""
+        active = [i for i in range(len(self.slots))
+                  if self.slots[i] is not None]
+        if not active:
+            return False
+        # on-demand page growth, oldest slots first; preempt the
+        # youngest active request until the survivors fit
+        for i in sorted(active, key=lambda j: self.slots[j].seq):
+            while self.slots[i] is not None and not self._grow(i):
+                victims = [j for j in range(len(self.slots))
+                           if self.slots[j] is not None]
+                victim = max(victims, key=lambda j: self.slots[j].seq)
+                if victim == i and len(victims) == 1:
+                    raise RuntimeError(
+                        f"pool of {self.scfg.num_pages} pages cannot "
+                        f"hold a single request; raise num_pages or "
+                        f"page_size")
+                self._preempt(victim)
+        active = [i for i in range(len(self.slots))
+                  if self.slots[i] is not None]
+        if not active:
+            return False
+        B = self.scfg.num_slots
+        toks = np.zeros((B, 1), np.int32)
+        posv = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for i in active:
+            req = self.slots[i]
+            toks[i, 0] = req.out[-1]
+            posv[i] = req.next_pos
+            act[i] = True
+        logits, self.pools = self._decode_step(
+            jnp.asarray(toks), jnp.asarray(posv), jnp.asarray(act))
+        logits = np.asarray(logits)
+        # advance every slot before any finish check: the decode step
+        # already wrote position next_pos for all of them, so a
+        # mid-loop _verify_table must not see a stale next_pos
+        sampled = []
+        for i in active:
+            req = self.slots[i]
+            tok = self._sample_token(logits[i, 0], req.rid, req.next_pos)
+            req.next_pos += 1
+            req.out.append(tok)
+            sampled.append((i, tok))
+        for i, tok in sampled:
+            self._finished(i, tok)
+        self._verify_table()
+        self.stats_history.append(self.pool_stats())
+        return True
+
+    def run(self, requests, max_new: int = 32) -> dict:
+        """Serve ``requests`` (a list of 1-D prompt token arrays) to
+        completion.  Returns {rid: generated np.int32 array}."""
+        for rid, prompt in enumerate(requests):
+            self.submit(rid, prompt, max_new)
+        while self.pending or any(s is not None for s in self.slots):
+            while self._admit_one():
+                pass
+            if not self.step() and self.pending:
+                raise RuntimeError(
+                    "no active slots and the head-of-line request "
+                    "cannot be admitted; pool too small")
+        return self.done
+
+
+def paged_throughput_report(server: PagedServer, requests,
+                            max_new: int = 16) -> dict:
+    t0 = time.perf_counter()
+    out = server.run(requests, max_new=max_new)
+    dt = time.perf_counter() - t0
+    tokens = int(sum(len(v) for v in out.values()))
+    frag = [s["fragmentation"] for s in server.stats_history] or [0.0]
+    util = [s["utilization"] for s in server.stats_history] or [0.0]
+    return {"tokens": tokens, "seconds": dt, "tok_per_s": tokens / dt,
+            "requests": len(out),
+            "preemptions": sum(1 for e in server.events
+                               if isinstance(e, dict)
+                               and e.get("kind") == "preempt"),
+            "mean_fragmentation": float(np.mean(frag)),
+            "peak_utilization": float(np.max(util))}
+
+
 def throughput_report(server: Server, batch: int, prompt_len: int,
                       max_new: int = 16):
     rng = np.random.default_rng(0)
@@ -386,6 +716,22 @@ def main():
                          "mesh drives the sharding.py param/cache specs "
                          "and the block-space kernels' shard_axis "
                          "('data') -- one mesh for the whole process.")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV pool + continuous-"
+                         "batching scheduler (PagedServer) instead of "
+                         "the fixed-batch contiguous server; --batch "
+                         "becomes the request count and prompts get "
+                         "mixed lengths in [4, --prompt-len]")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="paged: concurrently decoding slots (the "
+                         "static batch shape of the decode step)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page (the autotuned "
+                         "knob; see repro.core.tune.autotune_paged)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged: physical pages in the pool incl. the "
+                         "reserved null page (0 = enough for num_slots "
+                         "requests at max_len)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -428,6 +774,32 @@ def main():
         chaos = ChaosInjector(plan)
         print(f"chaos: {len(plan.faults)} faults scheduled "
               f"(seed {plan.seed})")
+    if args.paged:
+        from repro.core.paged import pages_for
+        max_len = args.prompt_len + args.max_new
+        num_pages = args.num_pages or (
+            1 + args.num_slots * pages_for(max_len, args.page_size))
+        server = PagedServer(cfg, params, PagedServeConfig(
+            max_len=max_len, temperature=args.temperature,
+            eos_id=args.eos_id, retries=args.retries,
+            deadline_s=args.deadline,
+            num_slots=args.num_slots, page_size=args.page_size,
+            num_pages=num_pages), chaos=chaos)
+        rng = np.random.default_rng(0)
+        requests = [rng.integers(0, cfg.vocab_size,
+                                 (int(rng.integers(4, args.prompt_len
+                                                   + 1)),))
+                    for _ in range(args.batch)]
+        print(f"paged: {args.num_slots} slots, {num_pages} pages of "
+              f"{args.page_size} tokens, {args.batch} mixed-length "
+              f"requests")
+        rep = paged_throughput_report(server, requests,
+                                      max_new=args.max_new)
+        if chaos is not None:
+            print(f"chaos: {len(chaos.events)} faults fired, "
+                  f"state {server.state.value}")
+        print(rep)
+        return
     server = Server(cfg, params, ServeConfig(
         max_len=args.prompt_len + args.max_new,
         temperature=args.temperature, eos_id=args.eos_id,

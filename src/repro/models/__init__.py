@@ -1,4 +1,5 @@
 from . import attention, layers, mla, model, moe, ssm
 from .config import ModelConfig
-from .model import (abstract_init, decode_step, forward, init, init_cache,
-                    logits_fn, loss_fn, prefill)
+from .model import (abstract_init, decode_step, decode_step_paged,
+                    forward, init, init_cache, init_paged_cache,
+                    logits_fn, loss_fn, prefill, scatter_prefill_pages)

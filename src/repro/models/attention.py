@@ -314,8 +314,10 @@ def decode_attention_flash(q, k, v, pos, *, kind="causal", window=0,
                            shard_axis: Optional[str] = None):
     """Single-token decode through the block-space Pallas kernel.
 
-    q: (B,H,1,D); k,v: (B,Hkv,Smax,D) caches; pos: () current position.
-    The kernel receives ``pos`` as a run-time scalar operand (SMEM on
+    q: (B,H,1,D); k,v: (B,Hkv,Smax,D) caches; pos: () current position,
+    or a (B,) int32 vector of *per-row* positions (continuous batching:
+    every slot decodes at its own depth; a scalar broadcasts).
+    The kernel receives ``pos`` as a run-time operand (SMEM on
     TPU, a regular operand on GPU): keys beyond ``pos`` are masked and
     key *blocks* beyond ``pos // block_k`` are predicated off -- the
     run-time analogue of the paper's block-space work saving.  On the
@@ -353,14 +355,15 @@ def decode_attention_flash(q, k, v, pos, *, kind="causal", window=0,
     from jax.sharding import PartitionSpec as P
 
     def device_fn(qd, kd, vd, posd):
-        return flash_attention_kernel(qd, kd, vd, seq_pos=posd[0], **kw)
+        return flash_attention_kernel(qd, kd, vd, seq_pos=posd, **kw)
 
+    posv = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     batched = P(axis, None, None, None)
     return shard_map(
         device_fn, mesh=mesh,
-        in_specs=(batched, batched, batched, P(None)),
-        out_specs=batched, check_rep=False)(
-            q, k, v, jnp.reshape(pos, (1,)).astype(jnp.int32))
+        in_specs=(batched, batched, batched, P(axis)),
+        out_specs=batched, check_rep=False)(q, k, v, posv)
 
 
 def flash_attention_kernel(*args, **kwargs):
@@ -372,8 +375,9 @@ def flash_attention_kernel(*args, **kwargs):
 
 def decode_attention(q, k, v, pos, *, kind="causal", window=0,
                      scale: Optional[float] = None):
-    """q: (B,H,1,D); k,v: (B,Hkv,S,D) cache; pos: () current position.
-    Keys at kpos > pos (unfilled cache tail) are masked out."""
+    """q: (B,H,1,D); k,v: (B,Hkv,S,D) cache; pos: () current position
+    or (B,) per-row positions.  Keys at kpos > pos (unfilled cache
+    tail) are masked out."""
     b, h, _, d = q.shape
     _, hkv, sk, _ = k.shape
     g = h // hkv
@@ -383,6 +387,9 @@ def decode_attention(q, k, v, pos, *, kind="causal", window=0,
     s = jnp.einsum("bhgd,bhkd->bhgk", qg, k,
                    preferred_element_type=jnp.float32) * scale
     kpos = jnp.arange(sk)[None, None, None, :]
+    pos = jnp.asarray(pos)
+    if pos.ndim:  # (B,) per-row decode positions
+        pos = pos.reshape(b, 1, 1, 1)
     valid = kpos <= pos
     if kind == "local":
         valid &= kpos > pos - window
@@ -390,6 +397,70 @@ def decode_attention(q, k, v, pos, *, kind="causal", window=0,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v)
     return o.reshape(b, h, 1, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_paged(q, kv_pool, page_table, pos, *,
+                           window: int = 0,
+                           scale: Optional[float] = None,
+                           grid_mode: str = "compact", backend=None,
+                           mesh=None, shard_axis: Optional[str] = None,
+                           verify: bool = False):
+    """Paged single-token decode through the block-space Pallas kernel.
+
+    q: (B,H,1,D) slot queries; kv_pool: (P, 2*Hkv, page_size, D) fused
+    page pool; page_table: (B, max_pages) i32; pos: (B,) per-slot
+    positions (a scalar broadcasts).  See
+    :func:`repro.kernels.flash_attention.paged_flash_attention`.
+
+    ``mesh`` (default: the registered serving mesh) shards the *slot*
+    axis: each device decodes its contiguous slot group against its
+    page-table rows with the pool replicated -- embarrassingly
+    parallel, like the contiguous decode path.  A batch that does not
+    tile the mesh axis runs unsharded."""
+    b = q.shape[0]
+    posv = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    kw = dict(window=window, scale=scale, grid_mode=grid_mode,
+              backend=backend, verify=verify)
+    if mesh is None:
+        mesh = _DECODE_MESH
+    axis = shard_axis or _DECODE_AXIS
+    if mesh is None or b % int(mesh.shape[axis]):
+        return paged_attention_kernel(q, kv_pool, page_table, posv, **kw)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def device_fn(qd, pool, ptd, posd):
+        return paged_attention_kernel(qd, pool, ptd, posd, **kw)
+
+    return shard_map(
+        device_fn, mesh=mesh,
+        in_specs=(P(axis, None, None, None), P(None, None, None, None),
+                  P(axis, None), P(axis)),
+        out_specs=P(axis, None, None, None), check_rep=False)(
+            q, kv_pool, page_table.astype(jnp.int32), posv)
+
+
+def paged_attention_kernel(*args, **kwargs):
+    """Import indirection for the paged Pallas kernel (as
+    :func:`flash_attention_kernel`)."""
+    from repro.kernels.flash_attention import paged_flash_attention
+    return paged_flash_attention(*args, **kwargs)
+
+
+def decode_attention_paged_xla(q, kv_pool, page_table, pos, *,
+                               window: int = 0,
+                               scale: Optional[float] = None):
+    """Pure-XLA paged decode: gather the mapped pages back into
+    contiguous caches, then run :func:`decode_attention`.  The oracle
+    of the paged bit-identity tests and the degradation ladder's
+    ``paged-xla`` rung (no Pallas in the loop)."""
+    from repro.core.paged import gather_kv
+    k, v = gather_kv(kv_pool, page_table)
+    kind = "local" if window else "causal"
+    return decode_attention(q, k, v, pos, kind=kind, window=window,
+                            scale=scale)
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,21 @@ def rope(x, positions, theta=10000.0):
     return out.astype(x.dtype)
 
 
+def rope_rows(x, positions, theta=10000.0):
+    """Per-batch-row RoPE for single-token decode: x (B,H,1,D) with even
+    D; positions (B,) int, one decode position per slot.  Equals
+    :func:`rope` broadcast when every row sits at the same position
+    (same elementwise ops, so bitwise equal)."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d // 2, dtype=jnp.float32) / (d // 2))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(angles)[:, None, None, :]      # (B,1,1,D/2)
+    sin = jnp.sin(angles)[:, None, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------
@@ -168,6 +183,33 @@ def attn_block_decode(params, x, cfg, kind, cache, pos):
         window=cfg.local_window)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.hd)
     return o @ params["wo"].astype(x.dtype), (k_cache, v_cache)
+
+
+def attn_block_decode_paged(params, x, cfg, kind, pool, page_table, pos,
+                            active=None):
+    """One-token step against a paged fused-KV pool (continuous
+    batching: every slot at its own position).
+
+    pool: (P, 2*Hkv, page_size, hd) head-interleaved pages
+    (:mod:`repro.core.paged`); page_table: (B, max_pages) i32; pos: (B,)
+    per-slot decode positions; active: optional (B,) bool -- inactive
+    slots write their new KV to the null page and their outputs are
+    garbage the scheduler must ignore.  Returns (out, updated pool)."""
+    from repro.core import paged as paged_lib
+
+    b, s, _ = x.shape  # s == 1
+    q, k_new, v_new = _qkv(params, x, cfg)
+    q = rope_rows(q, pos, cfg.rope_theta)
+    k_new = rope_rows(k_new, pos, cfg.rope_theta)
+    pool = paged_lib.append_token(pool, page_table, pos, k_new, v_new,
+                                  active)
+    decode = (attn_lib.decode_attention_paged
+              if cfg.attn_decode_kernel == "blockspace"
+              else attn_lib.decode_attention_paged_xla)
+    o = decode(q, pool, page_table, pos,
+               window=(cfg.local_window if kind == "local" else 0))
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.hd)
+    return o @ params["wo"].astype(x.dtype), pool
 
 
 # ---------------------------------------------------------------------------

@@ -449,3 +449,131 @@ def prefill(params, inputs, cfg: ModelConfig, max_len: int | None = None):
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = L.lm_head(params["lm_head"], h[:, -1:])
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# serving: paged KV (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _check_paged(cfg: ModelConfig) -> None:
+    """Paged serving covers plain-attention stacks (every mixer 'attn',
+    no shared block): MLA/SSM caches are not (K, V) pages."""
+    for i in range(cfg.n_layers):
+        mixer, _, _, shared = layer_sig(cfg, i)
+        if mixer != "attn" or shared:
+            raise ValueError(
+                f"paged serving needs an attention-only stack; layer "
+                f"{i} is {mixer!r}" + (" + shared block" if shared
+                                       else ""))
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Per-layer fused-KV page pools, the paged analogue of
+    :func:`init_cache`.  One *shared* (B, max_pages) page table (built
+    by the scheduler) addresses every layer's pool: the layers hold
+    different values at identical page indices."""
+    from repro.core import paged as paged_lib
+
+    _check_paged(cfg)
+    prefix, period, n_groups = group_layout(cfg)
+    dt = cfg.jdtype()
+
+    def one():
+        return {"mixer": paged_lib.init_pool(
+            num_pages, cfg.n_kv_heads, page_size, cfg.hd, dt)}
+
+    cache: Dict[str, Any] = {}
+    for i in range(prefix):
+        cache[f"prefix_{i}"] = one()
+    if n_groups:
+        cache["blocks"] = {
+            f"slot_{s}": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (n_groups,) + x.shape), one())
+            for s in range(period)}
+    return cache
+
+
+def scatter_prefill_pages(pools, caches, pages, cfg: ModelConfig):
+    """Admission: scatter one request's prefill KV (a batch-1
+    :func:`prefill` cache pytree, S tokens) into its allocated pages
+    across every layer pool.  ``pages``: (n,) i32 physical page ids,
+    ``n * page_size >= S`` (tail pages zero-padded, masked by seq_pos
+    at read time).  Returns the updated pools pytree."""
+    from repro.core import paged as paged_lib
+
+    prefix, period, n_groups = group_layout(cfg)
+    out: Dict[str, Any] = {}
+    for i in range(prefix):
+        k, v = caches[f"prefix_{i}"]["mixer"]
+        out[f"prefix_{i}"] = {"mixer": paged_lib.write_prefill_pages(
+            pools[f"prefix_{i}"]["mixer"], pages, k[0], v[0])}
+    if n_groups:
+        blocks: Dict[str, Any] = {}
+        for s in range(period):
+            k, v = caches["blocks"][f"slot_{s}"]["mixer"]
+            blocks[f"slot_{s}"] = {"mixer": jax.vmap(
+                lambda p, kk, vv: paged_lib.write_prefill_pages(
+                    p, pages, kk[0], vv[0]))(
+                pools["blocks"][f"slot_{s}"]["mixer"], k, v)}
+        out["blocks"] = blocks
+    return out
+
+
+def _paged_layer(p, h, sig, cfg, pool, page_table, pos, active):
+    mixer, akind, ffn, shared = sig
+    hn = L.rmsnorm(p["norm1"], h, cfg.norm_eps)
+    out, pool = L.attn_block_decode_paged(
+        p["mixer"], hn, cfg, akind, pool, page_table, pos, active)
+    h = h + out
+    h = constrain(h, "residual")
+    if ffn != "none":
+        hn = L.rmsnorm(p["norm2"], h, cfg.norm_eps)
+        if ffn == "dense":
+            h = h + L.mlp(p["ffn"], hn, megatron_sp=cfg.megatron_sp)
+        else:
+            out, _ = moe_lib.moe_block(p["ffn"], hn, cfg)
+            h = h + out
+        h = constrain(h, "residual")
+    return h, pool
+
+
+def decode_step_paged(params, inputs, pools, page_table, pos, active,
+                      cfg: ModelConfig):
+    """One token for every serving slot against the paged pools.
+
+    inputs: (B,1) tokens; page_table: (B, max_pages) i32; pos: (B,)
+    per-slot positions; active: (B,) bool (inactive slots write to the
+    null page and their logits are garbage the scheduler ignores).
+    Returns (logits (B,1,V), updated pools)."""
+    _check_paged(cfg)
+    prefix, period, n_groups = group_layout(cfg)
+    h = _embed_inputs(params, inputs, cfg)
+    new_pools: Dict[str, Any] = {}
+
+    for i in range(prefix):
+        h, pool = _paged_layer(
+            params[f"prefix_{i}"], h, layer_sig(cfg, i), cfg,
+            pools[f"prefix_{i}"]["mixer"], page_table, pos, active)
+        new_pools[f"prefix_{i}"] = {"mixer": pool}
+
+    if n_groups:
+        sigs = [layer_sig(cfg, prefix + s_) for s_ in range(period)]
+
+        def body(h, xs):
+            pslots, cslots = xs
+            out_c = {}
+            for s_ in range(period):
+                h, pool = _paged_layer(
+                    pslots[f"slot_{s_}"], h, sigs[s_], cfg,
+                    cslots[f"slot_{s_}"]["mixer"], page_table, pos,
+                    active)
+                out_c[f"slot_{s_}"] = {"mixer": pool}
+            return h, out_c
+
+        h, blocks_cache = jax.lax.scan(
+            body, h, (params["blocks"], pools["blocks"]))
+        new_pools["blocks"] = blocks_cache
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return L.lm_head(params["lm_head"], h), new_pools
